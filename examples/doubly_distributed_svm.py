@@ -1,0 +1,47 @@
+"""Doubly-distributed SODDA on a real device grid (shard_map).
+
+Runs the paper's algorithm with observations sharded over the 'data' mesh
+axis and features over the 'model' axis — the TPU realization of the paper's
+P x Q worker grid. On this CPU container we emulate a 4x3 pod slice:
+
+    PYTHONPATH=src python examples/doubly_distributed_svm.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=12")
+
+import time
+
+import jax
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import sodda
+from repro.core.distributed import distributed_objective, make_distributed_step
+from repro.data.synthetic import make_svm_data
+
+
+def main():
+    cfg = SoddaConfig(P=4, Q=3, n=2000, m=300, L=32, lr0=0.05)
+    print(f"devices: {len(jax.devices())}; grid P={cfg.P} x Q={cfg.Q}")
+    mesh = jax.make_mesh((cfg.P, cfg.Q), ("data", "model"))
+
+    X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
+    step = make_distributed_step(mesh, cfg)
+    obj = distributed_objective(mesh, cfg)
+
+    state = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
+    t0 = time.time()
+    for it in range(30):
+        if it % 5 == 0:
+            print(f"  iter {it:3d}  F(w) = {float(obj(X, y, state.w)):.4f}")
+        state = step(state, X, y)
+    print(f"  iter  30  F(w) = {float(obj(X, y, state.w)):.4f} "
+          f"({time.time()-t0:.1f}s)")
+    print("communication per outer iteration per device: "
+          f"~{(cfg.m * 4 * 2 + int(cfg.d_frac*cfg.n) * 4)/1e3:.1f} KB "
+          "(vs ~{:.1f} KB/inner-step for data-parallel SGD all-reduce)".format(
+              cfg.M * 4 / 1e3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: greedy-decode a batch of requests.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-9b
+(reduced config on CPU; the full configs are exercised by the dry-run)
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args(argv)
+    serve.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+                "--prompt_len", "16", "--gen_len", "16"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

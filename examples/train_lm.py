@@ -1,0 +1,29 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps on CPU,
+with checkpoint/restart and the SODDA-SVRG optimizer available.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --optimizer sodda
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--arch", default="mamba2-130m",
+                    help="mamba2-130m reduced ~= a 100M-class model on CPU")
+    args = ap.parse_args(argv)
+    train.main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256", "--optimizer", args.optimizer,
+        "--ckpt_dir", "/tmp/repro_train_lm", "--log_every", "20",
+    ])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""repro: SODDA (Fang & Klabjan 2018) as a multi-pod JAX/TPU framework.
+
+Subpackages: core (the paper's algorithm + baselines), models (the 10
+assigned architectures), kernels (Pallas TPU), optim, data, checkpoint,
+distributed, configs, launch. See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

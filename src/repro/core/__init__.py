@@ -1,0 +1,16 @@
+"""The paper's contribution: SODDA + baselines + distributed implementation."""
+from repro.core import losses, partition
+from repro.core.sodda import SoddaState, init_state, run, sodda_step
+from repro.core.radisa import radisa_avg_step, radisa_step, run_radisa_avg
+
+__all__ = [
+    "losses",
+    "partition",
+    "SoddaState",
+    "init_state",
+    "run",
+    "sodda_step",
+    "radisa_step",
+    "radisa_avg_step",
+    "run_radisa_avg",
+]

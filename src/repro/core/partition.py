@@ -1,0 +1,101 @@
+"""Doubly-distributed grid partitioning and the pi_q block-assignment maps.
+
+The data matrix X (N, M) is split into P observation partitions (rows) and
+Q feature partitions (columns); each feature partition is further divided
+into P sub-blocks of width m_tilde = M/(Q P). Worker (p, q) owns tile
+x^{p,q} and, in iteration t, updates the parameter sub-block
+w_{q, pi_q(p)} — pi_q is a permutation of {0..P-1} so exactly one worker
+touches each sub-block (conflict-free concatenation, paper step 19).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "block_col_start",
+    "pi_permutations",
+    "blocks_view",
+    "sample_iteration",
+    "IterationSample",
+]
+
+from typing import NamedTuple
+
+
+def block_col_start(q: int, k, m: int, m_tilde: int):
+    """Global column index where sub-block (q, k) starts."""
+    return q * m + k * m_tilde
+
+
+def pi_permutations(key, Q: int, P: int):
+    """(Q, P) int32; row q is pi_q — pi_q(p) = sub-block assigned to worker p.
+
+    Drawn with fold_in(key, q) so the distributed implementation can
+    reconstruct its own row without materializing the others.
+    """
+    def one(q):
+        return jax.random.permutation(jax.random.fold_in(key, q), P)
+
+    return jnp.stack([one(q) for q in range(Q)])
+
+
+def blocks_view(X, P: int, Q: int):
+    """Reshape X (N, M) -> (P, Q*P, n, m_tilde): [p, q*P+k] is x^{p,q,k}."""
+    N, M = X.shape
+    n, mt = N // P, M // (Q * P)
+    return X.reshape(P, n, Q * P, mt).transpose(0, 2, 1, 3)
+
+
+class IterationSample(NamedTuple):
+    """All randomness of one SODDA outer iteration (shared by the reference
+    and the shard_map implementation so they are bit-comparable)."""
+
+    mask_b: jnp.ndarray  # (M,) f32 — features entering the inner products
+    mask_c: jnp.ndarray  # (M,) f32 — gradient coordinates computed (C ⊆ B)
+    mask_d: jnp.ndarray  # (N,) f32 — observations used for the snapshot
+    pi: jnp.ndarray  # (Q, P) int32 — block assignment
+    J: jnp.ndarray  # (P, Q, L) int32 — inner-loop local row draws
+
+
+def _exact_count_mask(u, count: int):
+    """Mask selecting exactly `count` coordinates: the count smallest u's.
+
+    Equivalent in distribution to sampling `count` elements without
+    replacement (paper steps 5-7); nested thresholds on the same u give
+    C^t ⊆ B^t for free.
+    """
+    if count >= u.shape[0]:
+        return jnp.ones_like(u)
+    thresh = jnp.sort(u)[count - 1]
+    return (u <= thresh).astype(u.dtype)
+
+
+def sample_iteration(key, t, P: int, Q: int, n: int, M: int, L: int,
+                     b_count: int, c_count: int, d_count_local: int) -> IterationSample:
+    """Draw (B^t, C^t, D^t, pi, J) for outer iteration t.
+
+    D^t is stratified per observation partition (d_count_local rows each) —
+    equivalent in expectation to the paper's global draw and what a
+    distributed implementation can sample without communication.
+    """
+    kt = jax.random.fold_in(key, t)
+    kb, kd, kp, kj = jax.random.split(kt, 4)
+    u = jax.random.uniform(kb, (M,))
+    mask_b = _exact_count_mask(u, b_count)
+    mask_c = _exact_count_mask(u, c_count)  # nested: C ⊆ B
+    # per-partition observation masks with the same fold_in(p) the
+    # distributed version uses
+    mask_d = jnp.stack([
+        _exact_count_mask(jax.random.uniform(jax.random.fold_in(kd, p), (n,)), d_count_local)
+        for p in range(P)
+    ]).reshape(P * n)
+    pi = pi_permutations(kp, Q, P)
+    J = jnp.stack([
+        jnp.stack([
+            jax.random.randint(jax.random.fold_in(kj, p * Q + q), (L,), 0, n)
+            for q in range(Q)
+        ])
+        for p in range(P)
+    ])
+    return IterationSample(mask_b, mask_c, mask_d, pi, J)

@@ -1,0 +1,78 @@
+"""RADiSA and RADiSA-avg baselines (Nathan & Klabjan 2017, paper ref [13]).
+
+RADiSA is the b=c=d=100% special case of SODDA (exact full-gradient
+snapshot; paper Corollary 1). RADiSA-avg — the variant the paper benchmarks
+against — has every worker (p, q) update the *entire* local feature block
+w_[q] from its own observations, with the P per-partition solutions averaged
+afterwards (the "averaging" combination strategy the paper's pi-mechanism is
+designed to replace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import losses
+from repro.core.sodda import SoddaState, init_state, sodda_step, inner_loop
+
+__all__ = ["radisa_step", "radisa_avg_step", "run_radisa_avg", "init_state"]
+
+
+def radisa_config(cfg: SoddaConfig) -> SoddaConfig:
+    return dataclasses.replace(cfg, b_frac=1.0, c_frac=1.0, d_frac=1.0)
+
+
+def radisa_step(state: SoddaState, X, y, cfg: SoddaConfig):
+    """RADiSA = SODDA with the exact full gradient as snapshot."""
+    return sodda_step(state, X, y, radisa_config(cfg))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def radisa_avg_step(state: SoddaState, X, y, cfg: SoddaConfig):
+    P, Q, n, M, L, m = cfg.P, cfg.Q, cfg.n, cfg.M, cfg.L, cfg.m
+    gamma = cfg.lr0 / (1.0 + jnp.sqrt(jnp.maximum(state.t - 1, 0).astype(jnp.float32))) \
+        if cfg.constant_lr <= 0 else jnp.float32(cfg.constant_lr)
+
+    mu = losses.full_gradient(cfg.loss, X, y, state.w, cfg.l2)  # exact snapshot
+
+    kt = jax.random.fold_in(state.key, state.t)
+    J = jax.random.randint(kt, (P, Q, L), 0, n)
+
+    Xb = X.reshape(P, n, Q, m).transpose(0, 2, 1, 3)  # (P, Q, n, m)
+    yb = y.reshape(P, n)
+    wq = state.w.reshape(Q, m)
+    muq = mu.reshape(Q, m)
+
+    def one(p, q):
+        rows = J[p, q]
+        Xl = Xb[p, q][rows]  # (L, m) — the FULL local feature block
+        yl = yb[p][rows]
+        return inner_loop(cfg.loss, wq[q], Xl, yl, muq[q], gamma)
+
+    pq_p, pq_q = jnp.meshgrid(jnp.arange(P), jnp.arange(Q), indexing="ij")
+    wL = jax.vmap(jax.vmap(one))(pq_p, pq_q)  # (P, Q, m)
+    new_w = jnp.mean(wL, axis=0).reshape(M)  # average over the P workers
+    return SoddaState(w=new_w, t=state.t + 1, key=state.key)
+
+
+def run_radisa_avg(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1):
+    state = init_state(key, cfg.M)
+    hist = []
+    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
+    for it in range(iters):
+        if it % record_every == 0:
+            hist.append((it, float(obj(X, y, state.w))))
+        state = radisa_avg_step(state, X, y, cfg)
+    hist.append((iters, float(obj(X, y, state.w))))
+    return state, hist
+
+
+def radisa_avg_iteration_flops(cfg: SoddaConfig) -> float:
+    snapshot = 4.0 * cfg.N * cfg.M  # exact full gradient (fwd + transpose)
+    inner = cfg.P * cfg.Q * cfg.L * 6.0 * cfg.m  # full m-wide blocks
+    return snapshot + inner

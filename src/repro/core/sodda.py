@@ -1,0 +1,146 @@
+"""SODDA — StOchastic Doubly Distributed Algorithm (paper Algorithm 1).
+
+Single-host reference implementation, fully vectorized over the (P, Q)
+worker grid with vmap; the shard_map implementation in
+``repro.core.distributed`` is bit-comparable (same `sample_iteration`
+randomness), and ``repro.kernels.sodda_inner`` is the Pallas TPU kernel for
+the inner loop validated against `inner_loop` here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import losses
+from repro.core.partition import IterationSample, sample_iteration
+
+__all__ = ["SoddaState", "init_state", "sodda_step", "run", "snapshot_gradient",
+           "inner_loop", "iteration_flops"]
+
+
+class SoddaState(NamedTuple):
+    w: jnp.ndarray  # (M,) current iterate
+    t: jnp.ndarray  # int32, 1-based outer iteration (for gamma_t)
+    key: jnp.ndarray  # base PRNG key (folded with t each iteration)
+
+
+def init_state(key, M: int) -> SoddaState:
+    return SoddaState(w=jnp.zeros((M,), jnp.float32), t=jnp.array(1, jnp.int32), key=key)
+
+
+# ---------------------------------------------------------------------------
+# Step 8: stochastic snapshot gradient
+#   mu^t = (1/d^t) sum_{j in D^t} bar_grad_{w_{C^t}} f_j(x_j^{B^t} w_{B^t})
+# ---------------------------------------------------------------------------
+def snapshot_gradient(loss: str, X, y, w, sample: IterationSample, d_count: int):
+    zb = X @ (w * sample.mask_b)  # inner products restricted to B^t
+    s = losses.loss_deriv(loss, zb, y) * sample.mask_d / d_count
+    return sample.mask_c * (X.T @ s)  # coordinates restricted to C^t
+
+
+# ---------------------------------------------------------------------------
+# Steps 13-17: the L-step inner loop on one sub-block (paper step 16):
+#   wbar <- wbar - gamma * [ l'(x.wbar) x - l'(x.w0) x + mu_blk ]
+# (gradients evaluated at the block-restricted inner product — fully local)
+# ---------------------------------------------------------------------------
+def inner_loop(loss: str, w0, Xl, yl, mu_blk, gamma):
+    """w0 (mt,), Xl (L, mt), yl (L,), mu_blk (mt,) -> (mt,)."""
+    deriv = functools.partial(losses.loss_deriv, loss)
+
+    def step(wbar, inp):
+        x, yy = inp
+        z1 = x @ wbar
+        z0 = x @ w0
+        g = (deriv(z1, yy) - deriv(z0, yy)) * x + mu_blk
+        return wbar - gamma * g, None
+
+    wL, _ = jax.lax.scan(step, w0, (Xl, yl))
+    return wL
+
+
+# ---------------------------------------------------------------------------
+# One full outer iteration (paper steps 5-19)
+# ---------------------------------------------------------------------------
+def _counts(cfg: SoddaConfig):
+    b = max(1, int(round(cfg.b_frac * cfg.M)))
+    c = max(1, min(b, int(round(cfg.c_frac * cfg.M))))
+    d_local = max(1, int(round(cfg.d_frac * cfg.n)))
+    return b, c, d_local
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = False):
+    P, Q, n, M, L = cfg.P, cfg.Q, cfg.n, cfg.M, cfg.L
+    m, mt = cfg.m, cfg.m_tilde
+    b_count, c_count, d_local = _counts(cfg)
+    gamma = cfg.lr0 / (1.0 + jnp.sqrt(jnp.maximum(state.t - 1, 0).astype(jnp.float32))) \
+        if cfg.constant_lr <= 0 else jnp.float32(cfg.constant_lr)
+
+    smp = sample_iteration(state.key, state.t, P, Q, n, M, L, b_count, c_count, d_local)
+    mu = snapshot_gradient(cfg.loss, X, y, state.w, smp, P * d_local)
+
+    # gather per-(p,q) working sets ----------------------------------------
+    Xb = X.reshape(P, n, Q * P, mt).transpose(0, 2, 1, 3)  # (P, QP, n, mt)
+    yb = y.reshape(P, n)
+    wb = state.w.reshape(Q, P, mt)
+    mub = mu.reshape(Q, P, mt)
+
+    pq_p, pq_q = jnp.meshgrid(jnp.arange(P), jnp.arange(Q), indexing="ij")
+
+    def gather_one(p, q):
+        k = smp.pi[q, p]
+        rows = smp.J[p, q]  # (L,)
+        Xl = Xb[p, q * P + k][rows]  # (L, mt)
+        yl = yb[p][rows]
+        return Xl, yl, wb[q, k], mub[q, k]
+
+    Xl, yl, w0, mu_blk = jax.vmap(jax.vmap(gather_one))(pq_p, pq_q)
+
+    if use_kernel:
+        from repro.kernels import ops as kops  # local import: optional dep
+        wL = kops.sodda_inner(
+            w0.reshape(P * Q, mt), Xl.reshape(P * Q, L, mt),
+            yl.reshape(P * Q, L), mu_blk.reshape(P * Q, mt),
+            gamma, cfg.loss, force="pallas").reshape(P, Q, mt)
+    else:
+        wL = jax.vmap(jax.vmap(
+            lambda w_, X_, y_, m_: inner_loop(cfg.loss, w_, X_, y_, m_, gamma)
+        ))(w0, Xl, yl, mu_blk)
+
+    # step 19: conflict-free concatenation — each (q, pi_q(p)) written once
+    q_idx = jnp.repeat(jnp.arange(Q), P)
+    k_idx = smp.pi.reshape(-1)
+    new_wb = wb.at[q_idx, k_idx].set(wL.transpose(1, 0, 2).reshape(Q * P, mt))
+    return SoddaState(w=new_wb.reshape(M), t=state.t + 1, key=state.key)
+
+
+def run(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1,
+        use_kernel: bool = False):
+    """Run SODDA, returning (final state, [(t, F(w^t)) history])."""
+    state = init_state(key, cfg.M)
+    hist = []
+    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
+    for it in range(iters):
+        if it % record_every == 0:
+            hist.append((it, float(obj(X, y, state.w))))
+        state = sodda_step(state, X, y, cfg, use_kernel)
+    hist.append((iters, float(obj(X, y, state.w))))
+    return state, hist
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-iteration cost (gradient-coordinate evaluations), used by the
+# benchmark to reproduce the paper's "better in early iterations" claim on a
+# machine-independent x-axis.
+# ---------------------------------------------------------------------------
+def iteration_flops(cfg: SoddaConfig, exact_snapshot: bool = False) -> float:
+    b = 1.0 if exact_snapshot else cfg.b_frac
+    c = 1.0 if exact_snapshot else cfg.c_frac
+    d = 1.0 if exact_snapshot else cfg.d_frac
+    snapshot = 2.0 * d * cfg.N * (b * cfg.M) + 2.0 * d * cfg.N * (c * cfg.M)
+    inner = cfg.P * cfg.Q * cfg.L * 6.0 * cfg.m_tilde
+    return snapshot + inner

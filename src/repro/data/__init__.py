@@ -1,0 +1,4 @@
+from repro.data.synthetic import make_svm_data
+from repro.data.tokens import synthetic_token_batch, TokenPipeline
+
+__all__ = ["make_svm_data", "synthetic_token_batch", "TokenPipeline"]

@@ -1,0 +1,26 @@
+"""The paper's synthetic SVM dataset generator (Section 5.1, after [22]).
+
+x_i ~ U[-1, 1]^M and a planted separator z ~ U[-1, 1]^M; labels
+y_i = sgn(x_i . z) with each sign flipped independently with prob 0.01.
+Data is dense and features are standardized to unit variance (paper: "the
+features are standardized to have unit variance").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_svm_data(key, N: int, M: int, flip_prob: float = 0.01, standardize: bool = True):
+    """Returns (X (N,M) f32, y (N,) f32 in {-1,+1}, planted z (M,))."""
+    kx, kz, kf = jax.random.split(key, 3)
+    X = jax.random.uniform(kx, (N, M), minval=-1.0, maxval=1.0, dtype=jnp.float32)
+    z = jax.random.uniform(kz, (M,), minval=-1.0, maxval=1.0, dtype=jnp.float32)
+    y = jnp.sign(X @ z)
+    y = jnp.where(y == 0, 1.0, y)
+    flips = jax.random.bernoulli(kf, flip_prob, (N,))
+    y = jnp.where(flips, -y, y)
+    if standardize:
+        # U[-1,1] already has mean 0; scale to unit variance (std = 1/sqrt(3)).
+        X = X / jnp.std(X, axis=0, keepdims=True)
+    return X, y.astype(jnp.float32), z

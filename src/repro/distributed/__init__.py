@@ -1,0 +1,8 @@
+from repro.distributed.sharding_rules import (
+    activation_pspec_fn,
+    batch_axes,
+    decode_mode,
+    rules_for,
+)
+
+__all__ = ["rules_for", "batch_axes", "decode_mode", "activation_pspec_fn"]

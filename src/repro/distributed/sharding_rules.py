@@ -1,0 +1,135 @@
+"""Logical-axis -> mesh-axis rules, per architecture family.
+
+One table to hillclimb. Conventions (see DESIGN.md §5):
+  * dense TP over 'model': attention heads, MLP hidden, vocab;
+  * MoE 2-D expert sharding: experts over 'model', expert-FFN hidden over
+    'data' (FSDP-gathered per layer), dispatched capacity over 'data';
+  * kv heads sharded only when divisible by the TP width, else replicated
+    (decode then uses the sequence-sharded cache path);
+  * SSM inner channels sharded over 'model' only when head-aligned
+    (zamba2: 112 heads % 16 == 0 — yes; mamba2-130m: 24 — no, replicated);
+  * the 'pod' axis (multi-pod mesh) joins 'data' for batch sharding: pure
+    extra data parallelism with hierarchical gradient reduction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.configs.base import ArchConfig, ShapeConfig, round_up
+
+
+def padded_heads(cfg: ArchConfig) -> int:
+    """q-heads padded to the TP width (duplicated in models.attention to
+    avoid a circular import; keep in sync)."""
+    return round_up(cfg.num_heads, 16)
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def rules_for(cfg: ArchConfig, mesh: Mesh, overrides: Optional[dict] = None) -> dict:
+    tp = mesh.shape["model"]
+    data = _data_axes(mesh)
+    rules = {
+        "vocab": "model",
+        "embed": None,
+        "layers": None,
+        "heads": "model" if padded_heads(cfg) % tp == 0 else None,
+        "kv_heads": "model" if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0 else None,
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        # FSDP-style second axis for MoE weights; on the multi-pod mesh the
+        # expert FFN dim shards over BOTH data axes (pod x data = 32-way) so
+        # the 480B/1T weight tensors use all 512 chips.
+        "expert_mlp": data if len(data) > 1 else data[0],
+        "expert_cap": data[-1],
+        "batch": data,
+        "ssm_inner": "model" if cfg.has_ssm and cfg.ssm_heads % tp == 0 else None,
+        "ssm_heads": "model" if cfg.has_ssm and cfg.ssm_heads % tp == 0 else None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+# §Perf MoE layout variants (see EXPERIMENTS.md):
+#   'gather'  (default) — experts over 'model', expert-FFN hidden over 'data';
+#       expert weights are FSDP-gathered over 'data' every layer.
+#   'token_tp' — experts over 'data', expert-FFN hidden over 'model';
+#       tokens all-to-all over 'data', classic Megatron psum over 'model',
+#       weights stationary.
+MOE_LAYOUTS = {
+    "gather": None,
+    "token_tp": {"experts": "data", "expert_mlp": "model", "expert_cap": None},
+}
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """Mesh axes used to shard the global batch dimension.
+
+    Attention-free archs with fully-replicated params (mamba2-130m) can fold
+    'model' into the batch when it divides — otherwise compute on the model
+    axis is redundant (honest cost, reported in the roofline).
+    """
+    data = _data_axes(mesh)
+    n_data = 1
+    for a in data:
+        n_data *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    if cfg.family == "ssm":
+        if shape.global_batch % (n_data * tp) == 0:
+            return data + ("model",)
+    if shape.global_batch % n_data == 0:
+        return data
+    # fall back to largest prefix of data axes that divides
+    for i in range(len(data), 0, -1):
+        n = 1
+        for a in data[:i]:
+            n *= mesh.shape[a]
+        if shape.global_batch % n == 0:
+            return data[:i]
+    return ()
+
+
+def decode_mode(cfg: ArchConfig, mesh: Mesh) -> str:
+    """'heads' when kv heads shard over the model axis, else 'seq'
+    (sequence-sharded KV cache + shard_map flash-decode)."""
+    if not cfg.num_kv_heads:
+        return "none"
+    return "heads" if cfg.num_kv_heads % mesh.shape["model"] == 0 else "seq"
+
+
+def activation_pspec_fn(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                        overrides: Optional[dict] = None):
+    """Returns fn(logical_axes) -> NamedSharding for activation constraints
+    (NamedSharding rather than bare PartitionSpec so constraints work without
+    an ambient mesh context)."""
+    from jax.sharding import NamedSharding
+
+    rules = rules_for(cfg, mesh, overrides)
+    b_axes = batch_axes(cfg, shape, mesh)
+
+    def fn(axes):
+        out = []
+        used = set()
+        for name in axes:
+            if name == "batch":
+                ax = tuple(a for a in b_axes if a not in used)
+                used.update(ax)
+                out.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+                continue
+            ax = rules.get(name) if name else None
+            if ax is not None and ax in used:
+                ax = None
+            if ax is not None:
+                used.add(ax)
+            out.append(ax)
+        return NamedSharding(mesh, PartitionSpec(*out))
+
+    # moe_forward consults this: weight f-gather only in the 'gather' layout
+    fn.gather_weights = not (overrides or {}).get("expert_mlp") == "model"
+    return fn

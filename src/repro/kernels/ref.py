@@ -1,0 +1,154 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are also the implementations used on backends without Pallas support
+(the CPU dry-run lowers these; the Pallas kernels are the TPU target and are
+validated against these in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+# ---------------------------------------------------------------------------
+# sodda_inner: the paper's L-step inner SVRG loop over a batch of blocks
+# ---------------------------------------------------------------------------
+def sodda_inner_ref(w0, Xl, yl, mu, gamma, loss: str = "hinge"):
+    """w0 (B, mt), Xl (B, L, mt), yl (B, L), mu (B, mt) -> (B, mt)."""
+    deriv = functools.partial(losses.loss_deriv, loss)
+
+    def one(w0_, Xl_, yl_, mu_):
+        def step(wbar, inp):
+            x, yy = inp
+            g = (deriv(x @ wbar, yy) - deriv(x @ w0_, yy)) * x + mu_
+            return wbar - gamma * g, None
+
+        out, _ = jax.lax.scan(step, w0_, (Xl_, yl_))
+        return out
+
+    return jax.vmap(one)(w0, Xl, yl, mu)
+
+
+# ---------------------------------------------------------------------------
+# attention: chunked online-softmax reference (numerically the flash schedule,
+# memory O(S * chunk)); supports causal, sliding window, GQA, logit softcap.
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, chunk: int = 512, q_offset: int = 0):
+    """q (B, Sq, H, D), k/v (B, Sk, KV, D) -> (B, Sq, H, D).
+
+    `q_offset`: absolute position of q[0] (for decode: q_offset = cache_len).
+    GQA: query head h attends to kv head h // (H // KV).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    group = H // KV
+    scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+    # expand kv heads to H (XLA turns this into an indexed read, not a copy,
+    # under jit when followed by einsum)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    qpos = q_offset + jnp.arange(Sq)
+    nchunks = max(1, (Sk + chunk - 1) // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, H, D)
+    vc = v.reshape(B, nchunks, chunk, H, D)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c = inp
+        kpos = c * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = kpos[None, :] < Sk  # padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_naive(q, k, v, *, causal=True, window=0, softcap=0.0, q_offset=0):
+    """O(S^2)-memory textbook attention — oracle for attention_ref itself."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos[None] <= qpos[:, None])
+    if window > 0:
+        mask = mask & (qpos[:, None] - kpos[None] < window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD: exact sequential recurrence (oracle) — the chunked kernel and
+# the chunked jnp implementation in models/ssm.py must match this.
+#   state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * outer(B_t, x_t)
+#   y_t     = C_t . state_t + D_h * x_t
+# ---------------------------------------------------------------------------
+def ssd_ref(x, dt, A, Bm, Cm, D=None):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,G,N) -> (B,S,H,P)."""
+    Bsz, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    assert H % G == 0
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def scan_one(carry, inp):
+        state = carry  # (H, P, N)
+        x_t, dt_t, B_t, C_t = inp  # (H,P),(H,),(H,N),(H,N)
+        decay = jnp.exp(dt_t * A)  # (H,)
+        state = state * decay[:, None, None] + (dt_t[:, None] * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("hpn,hn->hp", state, C_t)
+        return state, y
+
+    def per_batch(xb, dtb, Bb, Cb):
+        s0 = jnp.zeros((H, Pd, Bm.shape[-1]), jnp.float32)
+        _, ys = jax.lax.scan(scan_one, s0, (xb.astype(jnp.float32),
+                                            dtb.astype(jnp.float32),
+                                            Bb.astype(jnp.float32),
+                                            Cb.astype(jnp.float32)))
+        return ys
+
+    y = jax.vmap(per_batch)(x, dt, Bh, Ch)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (state-space duality).
+
+SSD splits the linear recurrence
+    state_t = exp(dt_t A_h) state_{t-1} + dt_t B_t x_t ;  y_t = C_t . state_t
+into MXU-shaped chunks of length Cn:
+  * intra-chunk: a (Cn x Cn) causal, decay-weighted attention-like matmul
+    W = (C B^T) * exp(cum_i - cum_j) * dt_j  (j <= i), y_intra = W @ x
+  * inter-chunk: a (P x N) recurrent state carried in VMEM scratch across the
+    chunk grid dimension: y_inter_i = exp(cum_i) * C_i . state.
+
+Grid: (batch, heads, n_chunks), chunks innermost; scratch = the (P, N) f32
+state — the only sequential dependence, everything else is dense matmuls.
+All decay exponents are <= 0 by construction (A < 0, dt > 0), so every exp()
+is in (0, 1]: no rescaling pass is needed.
+
+VMEM per program at (Cn=128, P=64, N=128): x/B/C/out tiles + W + state
+≈ 0.35 MB f32 — double-bufferable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                cn: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Cn, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Cn,)
+    A = a_ref[0].astype(jnp.float32)  # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Cn, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Cn, N)
+
+    a = dt * A  # (Cn,) log-decay increments, <= 0
+    cum = jnp.cumsum(a)  # inclusive
+    # intra-chunk causal decay matrix: exp(cum_i - cum_j) for j <= i
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cn, cn), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cn, cn), 1)
+    seg = cum[:, None] - cum[None, :]
+    decay = jnp.where(jj <= ii, jnp.exp(seg), 0.0)  # (Cn, Cn)
+
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Cn, Cn)
+    W = G * decay * dt[None, :]
+    y = jax.lax.dot(W, x)  # (Cn, P) intra-chunk
+
+    state = state_ref[...]  # (P, N) from previous chunk
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))  # (Cn, P) inter-chunk
+
+    # state update for the next chunk
+    last = cum[cn - 1]
+    w_state = jnp.exp(last - cum) * dt  # (Cn,)
+    state_ref[...] = (jnp.exp(last) * state
+                      + jax.lax.dot_general(x, Bm * w_state[:, None],
+                                            (((0,), (0,)), ((), ()))))  # (P, N)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True):
+    """x (B,H,S,P), dt (B,H,S), A (H,), Bm/Cm (B,G,S,N) -> y (B,H,S,P).
+
+    S must be divisible by `chunk` (ops.py pads); H % G == 0.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    Bsz, H, S, Pd = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    assert S % chunk == 0 and H % G == 0
+    rep = H // G
+    grid = (Bsz, H, S // chunk)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, cn=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, S, Pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Diagnostic: dump the biggest collectives (with op provenance) of a cell's
+1-period probe. Usage:
+    PYTHONPATH=src python -m repro.launch.diag --arch gemma2-9b --shape train_4k
+"""
+import argparse
+import dataclasses
+import re
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import at_depth, lower_cell, period, settings_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import _shape_bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--depth", type=int, default=0)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    depth = args.depth or period(cfg)
+    cfg = at_depth(cfg, depth)
+    mesh = make_production_mesh(multi_pod=args.multi)
+    settings = dataclasses.replace(settings_for(get_config(args.arch).name),
+                                   accum_steps=1)
+    _, comp, secs = lower_cell(cfg, SHAPES[args.shape], mesh, settings,
+                               unroll=depth)
+    mem = comp.memory_analysis()
+    print(f"depth={depth} compile={secs:.1f}s temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+          f"arg={mem.argument_size_in_bytes/1e9:.2f}GB")
+    rows = []
+    for line in comp.as_text().splitlines():
+        line = line.strip()
+        for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute"):
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                pre = line.split(f" {kind}", 1)[0]
+                if "=" not in pre:
+                    continue
+                b = _shape_bytes(pre.split("=", 1)[1])
+                m = re.search(r'op_name="([^"]*)"', line)
+                rows.append((b, kind, pre.split("=", 1)[1].strip()[:44],
+                             (m.group(1) if m else "")[:120]))
+    rows.sort(reverse=True)
+    for b, kind, shp, op in rows[:args.top]:
+        print(f"{b/1e6:9.1f}MB {kind:17s} {shp:46s} {op}")
+
+
+if __name__ == "__main__":
+    main()

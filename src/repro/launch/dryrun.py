@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512"
+                           " --xla_allow_excess_precision=false")
+# excess-precision must be off: the CPU backend emulates bf16 in f32 and
+# otherwise KEEPS saved activations / collective operands in f32 — doubling
+# apparent memory and link bytes vs the TPU target (see EXPERIMENTS §Dry-run).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init). For each cell this driver:
+
+  1. compiles the FULL-depth step (train_step for train_4k/prefill_32k,
+     serve_step for decode_32k/long_500k) on the production mesh and prints
+     ``memory_analysis()`` — the proof that the cell compiles and fits;
+  2. compiles shallow probes (depth p and 2p, p = layer-pattern period;
+     zamba2 adds p+1 to separate the shared-attn marginal) and extrapolates
+     per-layer HLO flops / bytes / collective bytes to full depth — XLA's
+     cost analysis visits scan bodies once, so extrapolation from compiled
+     probes is the exact per-layer accounting (see roofline.py);
+  3. appends the record to results/dryrun.json (idempotent by cell key).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3_mini --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import chips, make_production_mesh
+from repro.launch.roofline import Roofline, collective_stats, total_link_bytes
+from repro.launch.serve import jit_decode_step, serve_shardings, make_serve_steps
+from repro.launch.train import TrainSettings, jit_train_step
+from repro.models import Model
+from repro.models.model import input_specs
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results",
+                       "dryrun.json")
+
+# Per-arch training settings for the production cells (memory-driven;
+# rationale in EXPERIMENTS.md §Dry-run).
+ARCH_SETTINGS = {
+    "kimi-k2-1t-a32b": TrainSettings(optimizer="adafactor", accum_steps=16,
+                                     remat="full", grad_dtype="bfloat16"),
+    "arctic-480b": TrainSettings(optimizer="adafactor", accum_steps=8,
+                                 remat="full", grad_dtype="bfloat16"),
+    "internvl2-26b": TrainSettings(optimizer="adamw", accum_steps=16,
+                                   remat="full"),
+    "gemma2-9b": TrainSettings(optimizer="adamw", accum_steps=8, remat="full"),
+    "minitron-8b": TrainSettings(optimizer="adamw", accum_steps=8, remat="full"),
+    "chatglm3-6b": TrainSettings(optimizer="adamw", accum_steps=8, remat="full"),
+    "zamba2-7b": TrainSettings(optimizer="adamw", accum_steps=8, remat="full"),
+    "mamba2-130m": TrainSettings(optimizer="adamw", accum_steps=1, remat="full"),
+}
+DEFAULT_SETTINGS = TrainSettings(optimizer="adamw", accum_steps=4, remat="full")
+
+
+def settings_for(arch: str) -> TrainSettings:
+    return ARCH_SETTINGS.get(arch, DEFAULT_SETTINGS)
+
+
+def period(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    if cfg.local_global:
+        return 2
+    return 1
+
+
+def probe_depths(cfg: ArchConfig):
+    p = period(cfg)
+    if cfg.family == "hybrid":
+        return [p, 2 * p, p + 1]
+    return [p, 2 * p]
+
+
+def at_depth(cfg: ArchConfig, depth: int) -> ArchConfig:
+    return dataclasses.replace(cfg, num_layers=depth)
+
+
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, settings,
+               unroll: int = 1):
+    """Returns (lowered, compiled) for one cell."""
+    with mesh:
+        return _lower_cell(cfg, shape, mesh, settings, unroll)
+
+
+def _lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, settings,
+                unroll: int = 1):
+    from repro.distributed.sharding_rules import MOE_LAYOUTS
+    model = Model(cfg, mesh=mesh, remat=settings.remat, unroll=unroll,
+                  rules_overrides=MOE_LAYOUTS.get(settings.moe_layout))
+    if shape.kind == "train":
+        jitted, opt, (abs_p, abs_o, *_rest) = jit_train_step(model, shape, settings)
+        specs = input_specs(cfg, shape)
+        lowered = jitted.lower(abs_p, abs_o, specs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        prefill_step, _ = make_serve_steps(model, shape)
+        param_sh, cache_sh, tok_sh, _ = serve_shardings(model, shape)
+        batch_sh = {"tokens": tok_sh}
+        if cfg.frontend != "none" and cfg.frontend_tokens:
+            mesh_ns = tok_sh
+            batch_sh["frontend_embeds"] = NamedSharding(
+                mesh, P(*(tuple(tok_sh.spec) + (None,))))
+        jitted = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh))
+        lowered = jitted.lower(model.abstract(), input_specs(cfg, shape))
+    else:  # decode
+        jitted, (param_sh, cache_sh, tok_sh, pos_sh) = jit_decode_step(model, shape)
+        specs = input_specs(cfg, shape, model)
+        lowered = jitted.lower(model.abstract(), specs["cache"],
+                               specs["tokens"], specs["pos"])
+    t0 = time.time()
+    compiled = lowered.compile()
+    return lowered, compiled, time.time() - t0
+
+
+def cell_record(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cfg.supports_shape(shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = chips(mesh)
+    settings = settings_for(cfg.name)
+    record = {"status": "ok", "chips": n_chips, "settings": dataclasses.asdict(settings)}
+
+    # 1) full-depth compile: memory + compile proof
+    t0 = time.time()
+    _, compiled, compile_s = lower_cell(cfg, shape, mesh, settings)
+    mem = compiled.memory_analysis()
+    record["full_compile_s"] = compile_s
+    record["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "total_nonarg_bytes": mem.temp_size_in_bytes + mem.output_size_in_bytes,
+        "hbm_per_device_gb": (mem.argument_size_in_bytes - mem.alias_size_in_bytes
+                              + mem.output_size_in_bytes + mem.temp_size_in_bytes) / 1e9,
+    }
+    full_cost = compiled.cost_analysis()
+    record["full_cost_raw"] = {"flops": full_cost.get("flops", 0.0),
+                               "bytes": full_cost.get("bytes accessed", 0.0)}
+    del compiled
+
+    # 2) probes for per-layer extrapolation: FULLY UNROLLED shallow models
+    # with accum_steps=1 so cost_analysis counts every op exactly once per
+    # step (no while loops). Same remat policy as the full run so recompute
+    # flops are included (that is real hardware work).
+    probe_settings = dataclasses.replace(settings, accum_steps=1)
+    probes = {}
+    for depth in probe_depths(cfg):
+        _, comp_p, _ = lower_cell(at_depth(cfg, depth), shape, mesh,
+                                  probe_settings, unroll=max(depth, 1))
+        cost = comp_p.cost_analysis()
+        stats = collective_stats(comp_p.as_text(), n_chips)
+        probes[depth] = {
+            "flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "link_bytes": total_link_bytes(stats),
+            "collectives": stats,
+        }
+        del comp_p
+    record["probes"] = {str(k): {kk: vv for kk, vv in v.items() if kk != "collectives"}
+                        for k, v in probes.items()}
+    record["collectives_probe"] = {
+        str(k): {kk: {"count": c["count"], "link_bytes": c["link_bytes"]}
+                 for kk, c in v["collectives"].items() if c["count"]}
+        for k, v in probes.items()}
+
+    # extrapolate to full depth
+    p = period(cfg)
+    L = cfg.num_layers
+    ext = {}
+    for metric in ("flops", "bytes", "link_bytes"):
+        x_p, x_2p = probes[p][metric], probes[2 * p][metric]
+        if cfg.family == "hybrid":
+            x_p1 = probes[p + 1][metric]
+            marg_ssm = x_p1 - x_p
+            marg_attn = (x_2p - x_p) - p * marg_ssm
+            n_sites = L // cfg.attn_every
+            val = x_p + (L - p) * marg_ssm + (n_sites - 1) * marg_attn
+        else:
+            marg = x_2p - x_p
+            val = x_p + (L / p - 1.0) * marg
+        ext[metric] = max(val, 0.0)
+    record["extrapolated"] = ext
+
+    rl = Roofline(
+        flops_per_device=ext["flops"],
+        hbm_bytes_per_device=ext["bytes"],
+        link_bytes_per_device=ext["link_bytes"],
+        chips=n_chips,
+        model_flops=cfg.model_flops(shape),
+    )
+    record["roofline"] = rl.as_dict()
+    record["wall_s"] = time.time() - t0
+    return record
+
+
+# ---------------------------------------------------------------------------
+def load_results(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS))
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    failures = 0
+    for arch in archs:
+        arch = get_config(arch).name
+        for shape_name in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if mp else 'single'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = cell_record(arch, shape_name, mp)
+                except Exception as e:
+                    rec = {"status": "failed", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                rec["timestamp"] = time.time()
+                results[key] = rec
+                save_results(args.out, results)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" hbm/dev={rec['memory']['hbm_per_device_gb']:.2f}GB"
+                             f" bottleneck={rec['roofline']['bottleneck']}"
+                             f" t_bound={max(rec['roofline']['t_compute_s'], rec['roofline']['t_memory_s'], rec['roofline']['t_collective_s']):.4f}s")
+                elif status == "failed":
+                    extra = " " + rec["error"][:160]
+                print(f"[done]   {key}: {status} ({time.time()-t0:.1f}s){extra}",
+                      flush=True)
+    print(f"\ncells: {len(results)} recorded, {failures} failures this run")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512"
+                           " --xla_allow_excess_precision=false")
+
+"""§Perf hillclimb driver for the LM cells: lowers a cell under a list of
+named setting variants and reports memory + roofline terms for each.
+
+    PYTHONPATH=src python -m repro.launch.perf_cells --cell phi3
+    PYTHONPATH=src python -m repro.launch.perf_cells --cell arctic
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import at_depth, lower_cell, period, probe_depths
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                   collective_stats, total_link_bytes)
+from repro.launch.train import TrainSettings
+
+CELLS = {
+    "phi3": ("phi3-mini-3.8b", "train_4k", [
+        ("baseline: full remat, accum 4",
+         TrainSettings(optimizer="adamw", accum_steps=4, remat="full")),
+        ("it1: remat=collectives (save TP-psum outputs)",
+         TrainSettings(optimizer="adamw", accum_steps=4, remat="collectives")),
+        ("it2: collectives remat + accum 2 (bigger microbatch)",
+         TrainSettings(optimizer="adamw", accum_steps=2, remat="collectives")),
+    ]),
+    "arctic": ("arctic-480b", "train_4k", [
+        ("baseline: weight-gather MoE layout, accum 8",
+         TrainSettings(optimizer="adafactor", accum_steps=8, remat="full",
+                       grad_dtype="bfloat16")),
+        ("it1: token_tp MoE layout (E/'data', f/'model')",
+         TrainSettings(optimizer="adafactor", accum_steps=8, remat="full",
+                       grad_dtype="bfloat16", moe_layout="token_tp")),
+        ("it2: token_tp + collectives remat",
+         TrainSettings(optimizer="adafactor", accum_steps=8,
+                       remat="collectives", grad_dtype="bfloat16",
+                       moe_layout="token_tp")),
+    ]),
+    "gemma2": ("gemma2-9b", "train_4k", [
+        ("baseline: full remat, accum 8",
+         TrainSettings(optimizer="adamw", accum_steps=8, remat="full")),
+        ("it1: remat=collectives",
+         TrainSettings(optimizer="adamw", accum_steps=8, remat="collectives")),
+    ]),
+}
+
+
+def measure(arch: str, shape_name: str, settings: TrainSettings):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    _, comp, compile_s = lower_cell(cfg, shape, mesh, settings)
+    mem = comp.memory_analysis()
+    hbm = (mem.argument_size_in_bytes - mem.alias_size_in_bytes
+           + mem.output_size_in_bytes + mem.temp_size_in_bytes) / 1e9
+    del comp
+    probe_settings = dataclasses.replace(settings, accum_steps=1)
+    probes = {}
+    for depth in probe_depths(cfg):
+        _, cp, _ = lower_cell(at_depth(cfg, depth), shape, mesh,
+                              probe_settings, unroll=max(depth, 1))
+        cost = cp.cost_analysis()
+        probes[depth] = (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+                         total_link_bytes(collective_stats(cp.as_text(), 256)))
+        del cp
+    p = period(cfg)
+    L = cfg.num_layers
+    out = []
+    for i in range(3):
+        x_p, x_2p = probes[p][i], probes[2 * p][i]
+        out.append(max(x_p + (L / p - 1.0) * (x_2p - x_p), 0.0))
+    flops, bts, link = out
+    return {
+        "hbm_gb": hbm,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bts / HBM_BW,
+        "t_collective": link / LINK_BW,
+        "model_flops": cfg.model_flops(shape),
+        "hlo_flops_global": flops * 256,
+        "compile_s": compile_s,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    args = ap.parse_args(argv)
+    arch, shape, variants = CELLS[args.cell]
+    print(f"== §Perf cell {arch} x {shape} ==")
+    for name, st in variants:
+        r = measure(arch, shape, st)
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["model_flops"] / (256 * PEAK_FLOPS * bound) if bound else 0
+        print(f"{name}\n   hbm/dev={r['hbm_gb']:.2f}GB "
+              f"t_comp={r['t_compute']:.3f}s t_mem={r['t_memory']:.3f}s "
+              f"t_coll={r['t_collective']:.3f}s "
+              f"useful={r['model_flops']/r['hlo_flops_global']:.3f} "
+              f"roofline_frac={frac:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Distributed train step builder + end-to-end training driver.
+
+``make_train_step`` builds the jitted SPMD train step for (arch x shape x
+mesh): gradient accumulation via lax.scan (microbatching for the biggest
+archs), any optimizer from repro.optim (incl. ZeRO-1 state sharding), the
+SODDA-SVRG optimizer as a first-class choice, and loss/grad-norm metrics.
+
+Run directly for a real (small) training run on CPU:
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 50 --batch 8 --seq 256 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, reduced_config
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding_rules import activation_pspec_fn, batch_axes
+from repro.models import Model
+from repro.models.model import input_specs
+from repro.optim import OPTIMIZERS
+from repro.optim.optimizers import zero1_pspecs
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    accum_steps: int = 1
+    remat: str = "dots"
+    zero1: bool = True
+    state_dtype: str = "float32"  # bfloat16 for the 1T-class archs
+    grad_dtype: str = "float32"  # accumulation dtype (bfloat16 for 480B/1T)
+    moe_layout: str = "gather"  # 'gather' | 'token_tp'  (§Perf MoE ablation)
+
+
+def make_optimizer(settings: TrainSettings):
+    kwargs = {}
+    if settings.optimizer in ("momentum", "adamw"):
+        kwargs["state_dtype"] = jnp.dtype(settings.state_dtype)
+    return OPTIMIZERS[settings.optimizer](settings.lr, **kwargs)
+
+
+def batch_pspec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    axes = batch_axes(cfg, shape, mesh)
+    b = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return {
+        "tokens": P(b, None),
+        "targets": P(b, None),
+        **({"frontend_embeds": P(b, None, None)}
+           if cfg.frontend != "none" and cfg.frontend_tokens else {}),
+    }
+
+
+def make_train_step(model: Model, shape: ShapeConfig, settings: TrainSettings):
+    cfg, mesh = model.cfg, model.mesh
+    opt = make_optimizer(settings)
+    from repro.distributed.sharding_rules import MOE_LAYOUTS
+    overrides = MOE_LAYOUTS.get(settings.moe_layout)
+    pspec_fn = (activation_pspec_fn(cfg, shape, mesh, overrides)
+                if mesh is not None else None)
+    A = settings.accum_steps
+    grad_pspecs = model.pspecs() if mesh is not None else None
+
+    def constrain_grads(g):
+        if grad_pspecs is None:
+            return g
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as _P
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)),
+            g, grad_pspecs, is_leaf=lambda x: isinstance(x, _P))
+
+    def loss_fn(p, mb):
+        loss, metrics = model.loss(p, mb, pspec_fn)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if A == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                # keep the accumulator sharded like the params — otherwise
+                # GSPMD may leave the f32 carry replicated (full-model-sized
+                # per-device buffers)
+                return (constrain_grads(gsum), lsum + l), None
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+            gdt = jnp.dtype(settings.grad_dtype)
+            zeros = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params))
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbatch)
+            grads = jax.tree.map(lambda g: g / A, gsum)
+            loss = lsum / A
+            metrics = {"ce": loss, "aux": jnp.float32(0)}
+        # NOTE: jnp.vdot would reshape each (sharded) grad to 1-D, which
+        # forces XLA to all-gather full gradients; axis-preserving reductions
+        # stay sharded.
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        new_params, new_state = opt.update(grads, opt_state, params, step)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def shardings_for(model: Model, shape: ShapeConfig, settings: TrainSettings,
+                  opt):
+    """(param, opt_state, batch) NamedShardings for jit in_shardings."""
+    mesh = model.mesh
+    pspecs = model.pspecs()
+    ns = lambda spec: NamedSharding(mesh, spec)
+    param_sh = jax.tree.map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    abs_params = model.abstract()
+    abs_opt = jax.eval_shape(opt.init, abs_params)
+
+    # opt-state leaves follow their param's spec (+ ZeRO-1 'data' sharding).
+    # Adafactor's factored moments match a param's shape with the last (row
+    # moment) or second-to-last (col moment) dim removed — map those to the
+    # param spec with the corresponding axis dropped.
+    pspec_list = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    param_shapes = [(l.shape, s) for l, s in
+                    zip(jax.tree.leaves(abs_params), pspec_list)]
+    shape_to_spec = {}
+    for shp, s in param_shapes:
+        shape_to_spec.setdefault(shp, s)
+        specs = list(s) + [None] * (len(shp) - len(s))
+        if len(shp) >= 2:
+            shape_to_spec.setdefault(tuple(shp[:-1]), P(*specs[:-1]))  # r
+            shape_to_spec.setdefault(tuple(shp[:-2]) + shp[-1:],
+                                     P(*(specs[:-2] + specs[-1:])))  # c
+
+    def opt_spec(leaf):
+        base = shape_to_spec.get(leaf.shape, P())
+        if settings.zero1:
+            return zero1_pspecs(base, leaf.shape, mesh)
+        return base
+
+    opt_sh = jax.tree.map(lambda l: ns(opt_spec(l)), abs_opt)
+    batch_sh = jax.tree.map(ns, batch_pspec(model.cfg, shape, mesh))
+    return param_sh, opt_sh, batch_sh, abs_params, abs_opt
+
+
+def jit_train_step(model: Model, shape: ShapeConfig, settings: TrainSettings):
+    step_fn, opt = make_train_step(model, shape, settings)
+    param_sh, opt_sh, batch_sh, abs_params, abs_opt = shardings_for(
+        model, shape, settings, opt)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, batch_sh, None),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, opt, (abs_params, abs_opt, param_sh, opt_sh, batch_sh)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver: real training of a (reduced) model with checkpoint/restart
+# ---------------------------------------------------------------------------
+def main(argv=None):
+    from repro.checkpoint import CheckpointManager
+    from repro.data.tokens import TokenPipeline
+    from repro.launch.mesh import make_local_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=list(OPTIMIZERS) + ["sodda"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config (CPU-sized)")
+    ap.add_argument("--ckpt_dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt_every", type=int, default=25)
+    ap.add_argument("--log_every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg, seq_chunk=min(64, args.seq))
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    mesh = make_local_mesh(1, 1)
+    model = Model(cfg, mesh=mesh, param_dtype=jnp.float32)
+
+    settings = TrainSettings(optimizer=args.optimizer if args.optimizer != "sodda"
+                             else "sgd", lr=args.lr, zero1=False)
+    use_sodda = args.optimizer == "sodda"
+
+    pipeline = TokenPipeline(seed=0, batch=args.batch, seq_len=args.seq,
+                             vocab_size=cfg.vocab_size)
+    ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+
+    params = model.init(jax.random.PRNGKey(0))
+    if use_sodda:
+        from repro.optim import SoddaSVRGConfig, make_sodda_svrg
+        svrg = make_sodda_svrg(SoddaSVRGConfig(lr=args.lr, refresh_every=20))
+        state = svrg["init"](params)
+        loss_of = jax.jit(lambda p, b: model.loss(p, b)[0])
+        grad_of = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
+        for step in range(args.steps):
+            batch = pipeline.next()
+            if step % svrg["cfg"].refresh_every == 0:
+                d = max(1, int(svrg["cfg"].d_frac * args.batch))
+                sub = jax.tree.map(lambda x: x[:d], batch)
+                state = svrg["refresh"](state, params, grad_of(params, sub))
+            g1 = grad_of(params, batch)
+            g0 = grad_of(state["snap"], batch)
+            params, state = svrg["update"](params, state, g1, g0)
+            if step % args.log_every == 0:
+                print(f"step {step} loss {float(loss_of(params, batch)):.4f}")
+        return params
+
+    step_fn, opt = make_train_step(model, shape, settings)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    opt_state = opt.init(params)
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = pipeline.next()
+        params, opt_state, metrics = jitted(params, opt_state, batch,
+                                            jnp.int32(step))
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+        ckpt.maybe_save(step + 1, {"params": params},
+                        {"pipeline": pipeline.state_dict()})
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Shared layer primitives: RMSNorm, RoPE, embeddings, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float = 10000.0, fraction: float = 1.0):
+    """x (..., S, H, D), positions (..., S) int32. Rotates the first
+    `fraction` of D (chatglm-style partial rotary when fraction < 1)."""
+    D = x.shape[-1]
+    inv, rot = rope_freqs(D, theta, fraction)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def embed_tokens(embedding, tokens):
+    """embedding (V, d) possibly vocab-sharded; one-hot free gather."""
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed(h, w_unembed, cap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", h, w_unembed)
+    return softcap(logits.astype(jnp.float32), cap)
+
+
+def cross_entropy(logits, targets, vocab_size: int):
+    """logits (..., V) f32 (V possibly padded), targets (...) int32.
+
+    Sharding-friendly: no gather along the (model-sharded) vocab axis —
+    the gold logit is a one-hot contraction and the pad mask is an iota
+    compare, so each vocab shard reduces locally + one small psum.
+    """
+    V = logits.shape[-1]
+    if V > vocab_size:
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+        logits = jnp.where(vocab_ids >= vocab_size, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, V, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return (lse - gold).mean()

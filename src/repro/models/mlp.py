@@ -1,0 +1,22 @@
+"""SwiGLU MLP (dense) — the FFN for every non-MoE layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+
+def mlp_template(d_model: int, d_ff: int) -> dict:
+    return {
+        "wg": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wu": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wd": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_forward(p, h):
+    g = jnp.einsum("bsd,df->bsf", h, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", h, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["wd"])

@@ -1,0 +1,178 @@
+"""Model facade: one object tying config, template, sharding and the three
+entry points (train loss / prefill / decode) together, plus ``input_specs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding_rules import (activation_pspec_fn, batch_axes,
+                                              decode_mode, rules_for)
+from repro.models import attention, ssm, transformer
+from repro.models.params import (abstract_params, count_params, init_params,
+                                 param_pspecs)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                 remat: str = "dots", param_dtype=jnp.bfloat16,
+                 unroll: int = 1, rules_overrides: Optional[dict] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.remat = remat
+        self.unroll = unroll
+        self.rules_overrides = rules_overrides
+        self.param_dtype = param_dtype
+        self.template = transformer.model_template(cfg)
+
+    # -- parameters ------------------------------------------------------
+    def init(self, key, dtype=None):
+        params = init_params(self.template, key, dtype or self.param_dtype)
+        return self._fixup(params)
+
+    def _fixup(self, params):
+        """Zero the padded q-head wo rows (exact head padding, DESIGN §8)."""
+        cfg = self.cfg
+        if cfg.family in ("ssm",) or attention.padded_heads(cfg) == cfg.num_heads:
+            return params
+        if cfg.family == "hybrid":
+            params = dict(params, shared=dict(
+                params["shared"],
+                attn=attention.zero_padded_wo(cfg, params["shared"]["attn"])))
+        else:
+            layers = dict(params["layers"])
+            layers["attn"] = attention.zero_padded_wo(cfg, layers["attn"])
+            params = dict(params, layers=layers)
+        return params
+
+    def abstract(self, dtype=None):
+        return abstract_params(self.template, dtype or self.param_dtype)
+
+    def pspecs(self):
+        assert self.mesh is not None
+        return param_pspecs(self.template,
+                            rules_for(self.cfg, self.mesh, self.rules_overrides),
+                            self.mesh)
+
+    def shardings(self):
+        return jax.tree.map(lambda ps: NamedSharding(self.mesh, ps),
+                            self.pspecs(), is_leaf=lambda x: isinstance(x, P))
+
+    def param_count(self) -> int:
+        return count_params(self.template)
+
+    # -- entry points ------------------------------------------------------
+    def loss(self, params, batch, pspec_fn=None):
+        return transformer.loss_fn(params, batch, self.cfg, remat=self.remat,
+                                   pspec_fn=pspec_fn, unroll=self.unroll)
+
+    def prefill(self, params, batch, pspec_fn=None):
+        logits, cache, _ = transformer.forward(
+            params, batch["tokens"], self.cfg,
+            frontend_embeds=batch.get("frontend_embeds"),
+            remat=self.remat, pspec_fn=pspec_fn, last_only=True,
+            unroll=self.unroll,
+            collect_cache=self.cfg.family not in ("ssm", "hybrid"))
+        if cache is not None:
+            cache = {"k": cache[0], "v": cache[1]}
+        return logits[:, -1], cache
+
+    def decode(self, params, cache, tokens, pos, long_context=False,
+               pspec_fn=None):
+        mode = decode_mode(self.cfg, self.mesh) if self.mesh is not None else "heads"
+        return transformer.decode_step(params, cache, tokens, pos, self.cfg,
+                                       mesh=self.mesh, decode_mode=mode,
+                                       long_context=long_context,
+                                       unroll=self.unroll, pspec_fn=pspec_fn)
+
+    # -- caches ------------------------------------------------------------
+    def cache_template(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        if cfg.family == "ssm":
+            t = ssm.ssm_cache_template(cfg, batch)
+            return {k: jax.ShapeDtypeStruct((L,) + v.shape, v.dtype)
+                    for k, v in t.items()}
+        if cfg.family == "hybrid":
+            t = ssm.ssm_cache_template(cfg, batch)
+            out = {k: jax.ShapeDtypeStruct((L,) + v.shape, v.dtype)
+                   for k, v in t.items()}
+            sites = transformer.n_attn_sites(cfg)
+            # long-context serving uses the windowed cache (DESIGN §4)
+            s_attn = min(seq, cfg.sliding_window) if seq > 2 * cfg.sliding_window else seq
+            out["ak"] = jax.ShapeDtypeStruct((sites, batch, s_attn, KV, hd), dtype)
+            out["av"] = jax.ShapeDtypeStruct((sites, batch, s_attn, KV, hd), dtype)
+            return out
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, seq, KV, hd), dtype),
+            "v": jax.ShapeDtypeStruct((L, batch, seq, KV, hd), dtype),
+        }
+
+    def cache_pspecs(self, shape: Optional[ShapeConfig] = None):
+        """PartitionSpecs matching cache_template. If `shape` is given and
+        its batch does not divide the data axes (long_500k B=1), the batch
+        dim is left unsharded."""
+        cfg = self.cfg
+        mode = decode_mode(cfg, self.mesh) if self.mesh is not None else "heads"
+        data = ("pod", "data") if (self.mesh is not None and "pod" in self.mesh.shape) else ("data",)
+        if shape is not None and self.mesh is not None:
+            n = 1
+            for a in data:
+                n *= self.mesh.shape[a]
+            if shape.global_batch % n:
+                data = ()
+        b = data if len(data) > 1 else (data[0] if data else None)
+        if cfg.family == "ssm":
+            rules = rules_for(cfg, self.mesh)
+            hax = rules["ssm_heads"]
+            return {"state": P(None, b, hax, None, None),
+                    "conv": P(None, b, None, None)}
+        if cfg.family == "hybrid":
+            rules = rules_for(cfg, self.mesh)
+            hax = rules["ssm_heads"]
+            kv = P(None, b, "model", None, None) if mode == "heads" \
+                else P(None, b, "model", None, None)
+            # zamba2 kv=32 divides 16 -> heads mode; seq dim unsharded
+            return {"state": P(None, b, hax, None, None),
+                    "conv": P(None, b, None, None),
+                    "ak": P(None, b, None, "model", None),
+                    "av": P(None, b, None, "model", None)}
+        if mode == "heads":
+            return {"k": P(None, b, None, "model", None),
+                    "v": P(None, b, None, "model", None)}
+        return {"k": P(None, b, "model", None, None),
+                "v": P(None, b, "model", None, None)}
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input of a cell
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, model: Optional[Model] = None):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend != "none" and cfg.frontend_tokens:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend != "none" and cfg.frontend_tokens:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len cache
+    assert model is not None
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+        "cache": model.cache_template(B, S),
+    }

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts with top-k routing, capacity dispatch, and optional
+dense residual branch (arctic).
+
+Sharding (see DESIGN.md §5): expert weights are sharded over BOTH mesh axes
+— experts over 'model', expert-FFN hidden over 'data' ('expert_mlp' logical
+axis). The dispatched activations (E, cap, d) are constrained to
+P('model', 'data', None) so per-device transients stay bounded at
+T*k*cf*d / 256; XLA inserts the token all-to-all (dispatch) and the
+weight all-gather over 'data' (FSDP-style, overlappable) automatically.
+
+Dispatch is sort-free: positions within each expert's capacity buffer come
+from a segmented cumsum over the one-hot routing mask (the classic
+Switch/MaxText scheme), tokens over capacity are dropped (weight renorm keeps
+the combine unbiased for kept tokens).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models.mlp import mlp_template, mlp_forward
+
+
+def moe_template(cfg: ArchConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    t = {
+        "router": ParamSpec((d, E), ("embed", None), scale=0.1),
+        "wg": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wu": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wd": ParamSpec((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.moe_dense_residual:
+        t["dense"] = mlp_template(d, f)
+    return t
+
+
+def moe_forward(p, h, cfg: ArchConfig, *, capacity_factor: float = 1.25,
+                pspec_fn=None):
+    """h (B,S,d) -> (B,S,d). pspec_fn(logical_axes)->PartitionSpec or None."""
+    B, S, d = h.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    x = h.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(capacity_factor * T * k / E)
+    cap = max(((cap + 255) // 256) * 256, 256)
+
+    flat_e = idx.reshape(-1)  # (T*k,)
+    tok_id = jnp.repeat(jnp.arange(T), k)
+
+    # position of each (token, slot) within its expert's buffer via stable
+    # sort-based segment ranking: O(n log n) scalar work. (A one-hot cumsum
+    # rank is O(T*k*E) — at kimi scale that was 7e16 flops/step and SPMD
+    # replicated it; see EXPERIMENTS §Perf.)
+    order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * k) - seg_start[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, E * cap)  # sentinel slot drops
+
+    # Dispatch is INDEX-ONLY: scatter the int32 token ids into the slot map
+    # (E*cap ints — a few MB), then move activations with row GATHERS. A
+    # direct scatter of (T*k, d) activations makes SPMD materialize u32
+    # per-element index planes (see EXPERIMENTS §Perf arctic iteration 0).
+    slot_src = jnp.full((E * cap + 1,), T, jnp.int32)
+    slot_src = slot_src.at[dest].set(tok_id, mode="drop")[:-1]  # (E*cap,)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], 0)
+    x_disp = x_pad[slot_src].reshape(E, cap, d)
+
+    wg, wu, wd = p["wg"], p["wu"], p["wd"]
+    if pspec_fn is not None:
+        ecd = pspec_fn(("experts", "expert_cap", None))
+        x_disp = jax.lax.with_sharding_constraint(x_disp, ecd)
+        if getattr(pspec_fn, "gather_weights", True):
+            # 'gather' layout: expert weights stored (E/'model', d,
+            # f/'data'); FSDP-gather the f shard so the expert GEMM has a
+            # conflict-free layout (E on 'model', cap on 'data', f full).
+            # Transient 1-2 GB/layer, analyzed in DESIGN.md §5.
+            wfull = pspec_fn(("experts", None, None))
+            wg = jax.lax.with_sharding_constraint(wg, wfull)
+            wu = jax.lax.with_sharding_constraint(wu, wfull)
+            wd = jax.lax.with_sharding_constraint(wd, wfull)
+        # 'token_tp' layout: weights stay (E/'data', d, f/'model'); tokens
+        # all-to-all over 'data' and the contraction psums over 'model' —
+        # no weight movement (§Perf arctic iteration).
+
+    g = jnp.einsum("ecd,edf->ecf", x_disp, wg)
+    u = jnp.einsum("ecd,edf->ecf", x_disp, wu)
+    if pspec_fn is not None:
+        ecf = pspec_fn(("experts", "expert_cap", None))
+        g = jax.lax.with_sharding_constraint(g, ecf)
+        u = jax.lax.with_sharding_constraint(u, ecf)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+    if pspec_fn is not None:
+        y = jax.lax.with_sharding_constraint(y, ecd)
+
+    # Combine is scatter-free: every token owns exactly k slots, so gather
+    # its k expert outputs and contract with the gates.
+    y = jnp.concatenate([y.reshape(E * cap, d), jnp.zeros((1, d), y.dtype)], 0)
+    y_tok = y[jnp.where(keep, dest, E * cap)].reshape(T, k, d)
+    out = jnp.einsum("tk,tkd->td", gate.astype(jnp.float32),
+                     y_tok.astype(jnp.float32)).astype(h.dtype)
+
+    if cfg.moe_dense_residual:
+        out = out + mlp_forward(p["dense"], x[None]).reshape(T, d)
+
+    # auxiliary load-balancing loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[idx[:, 0]].add(1.0) / T
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,142 @@
+"""Parameter templates with logical sharding axes.
+
+A model is described once as a pytree of ``ParamSpec`` (shape, dtype, logical
+axes, initializer). From the template we derive, without ever materializing
+weights:
+  * ``init_params``   — actual arrays (smoke tests / real training),
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run lowering),
+  * ``param_shardings`` — NamedShardings via the per-arch logical->mesh rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (None = never sharded)
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 1.0  # stddev multiplier for 'normal'
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable, template):
+    return jax.tree.map(fn, template, is_leaf=is_spec)
+
+
+def _init_one(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    # fan-in scaled normal; embeddings scaled to 1.0
+    if spec.init == "embed":
+        std = 1.0
+    else:
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else math.prod(spec.shape[:-1])
+        # stacked layer dim (axis name 'layers') does not count toward fan-in
+        if spec.axes and spec.axes[0] == "layers" and len(spec.shape) > 2:
+            fan_in = math.prod(spec.shape[1:-1])
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(template, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(spec, k, dtype) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(template, dtype=jnp.bfloat16):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), template)
+
+
+def logical_to_pspec(spec: ParamSpec, rules: dict) -> PartitionSpec:
+    mesh_axes = []
+    used = set()
+    for name in spec.axes:
+        ax = rules.get(name) if name else None
+        # one mesh axis may appear at most once per spec
+        if ax is not None and not isinstance(ax, tuple):
+            ax = (ax,)
+        if ax is not None:
+            ax = tuple(a for a in ax if a not in used)
+            used.update(ax)
+            ax = ax or None
+        mesh_axes.append(ax if ax is None or len(ax) > 1 else ax[0])
+    return PartitionSpec(*mesh_axes)
+
+
+def check_divisibility(spec: ParamSpec, pspec: PartitionSpec, mesh: Mesh):
+    for dim, ax in zip(spec.shape, pspec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = math.prod(mesh.shape[a] for a in axes)
+        if dim % total:
+            return False
+    return True
+
+
+def param_pspecs(template, rules: dict, mesh: Optional[Mesh] = None):
+    """Pytree of PartitionSpec; if mesh given, un-shardable dims fall back to
+    replication (with divisibility enforced per mesh axis)."""
+
+    def one(spec: ParamSpec):
+        ps = logical_to_pspec(spec, rules)
+        if mesh is not None and not check_divisibility(spec, ps, mesh):
+            # drop offending axes one by one
+            fixed = []
+            for dim, ax in zip(spec.shape, ps):
+                if ax is None:
+                    fixed.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                total = math.prod(mesh.shape[a] for a in axes)
+                fixed.append(ax if dim % total == 0 else None)
+            ps = PartitionSpec(*fixed)
+        return ps
+
+    return tree_map_specs(one, template)
+
+
+def param_shardings(template, rules: dict, mesh: Mesh):
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, param_pspecs_one(s, rules, mesh)), template)
+
+
+def param_pspecs_one(spec: ParamSpec, rules: dict, mesh: Mesh) -> PartitionSpec:
+    ps = logical_to_pspec(spec, rules)
+    if not check_divisibility(spec, ps, mesh):
+        fixed = []
+        for dim, ax in zip(spec.shape, ps):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = math.prod(mesh.shape[a] for a in axes)
+            fixed.append(ax if dim % total == 0 else None)
+        ps = PartitionSpec(*fixed)
+    return ps
+
+
+def count_params(template) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(template, is_leaf=is_spec):
+        total += math.prod(leaf.shape)
+    return total

@@ -1,0 +1,157 @@
+"""Mamba-2 block (SSD form): template, chunked train forward, O(1) decode.
+
+The chunked jnp implementation below is the shape-for-shape reference of the
+Pallas ``ssd_scan`` kernel (same chunk decomposition → the HLO the dry-run
+lowers has the same FLOP/byte profile the TPU kernel realizes), and both are
+validated against the exact sequential recurrence ``kernels.ref.ssd_ref``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+G = 1  # ssm groups (mamba2-130m and zamba2 both use 1 B/C group)
+
+
+def ssm_template(cfg: ArchConfig) -> dict:
+    d, di, N, nh, k = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, G * N), ("embed", None)),
+        "wC": ParamSpec((d, G * N), ("embed", None)),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((k, di), (None, "ssm_inner"), scale=0.5),
+        "conv_B": ParamSpec((k, G * N), (None, None), scale=0.5),
+        "conv_C": ParamSpec((k, G * N), (None, None), scale=0.5),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "wout": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,C), w (k,C) via k shifted adds."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(k - 1):
+        shift = k - 1 - i
+        out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] * w[i]
+    return out
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D=None, chunk: int = 256):
+    """Chunked SSD. x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,G,N)."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    NC = S // chunk
+    rep = H // Bm.shape[2]
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, NC, chunk, H, Pd).astype(f32)
+    dtc = dt.reshape(Bsz, NC, chunk, H).astype(f32)
+    Bc = jnp.repeat(Bm, rep, 2).reshape(Bsz, NC, chunk, H, N).astype(f32)
+    Cc = jnp.repeat(Cm, rep, 2).reshape(Bsz, NC, chunk, H, N).astype(f32)
+
+    a = dtc * A  # (B,NC,Cn,H) log-decays, <= 0
+    cum = jnp.cumsum(a, axis=2)
+    seg = cum[:, :, :, None] - cum[:, :, None]  # (B,NC,Cn_i,Cn_j,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    Gm = jnp.einsum("bnchk,bnjhk->bnhcj", Cc, Bc)  # (B,NC,H,Cn,Cn)
+    W = Gm * decay.transpose(0, 1, 4, 2, 3) * dtc.transpose(0, 1, 3, 2)[:, :, :, None]
+    y = jnp.einsum("bnhcj,bnjhp->bnchp", W, xc)  # intra-chunk
+
+    # per-chunk outgoing state contribution
+    last = cum[:, :, -1:]  # (B,NC,1,H)
+    w_state = jnp.exp(last - cum) * dtc  # (B,NC,Cn,H)
+    S_c = jnp.einsum("bnchp,bnchk,bnch->bnhpk", xc, Bc, w_state)
+
+    # inter-chunk recurrence (sequential over NC)
+    def scan_fn(state, inp):
+        S_i, last_i = inp  # (B,H,P,N), (B,H)
+        out_state = state
+        new_state = state * jnp.exp(last_i)[:, :, None, None] + S_i
+        return new_state, out_state
+
+    _, states_in = jax.lax.scan(
+        scan_fn, jnp.zeros((Bsz, H, Pd, N), f32),
+        (S_c.transpose(1, 0, 2, 3, 4), last[:, :, 0].transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bnchk,bnhpk->bnchp", Cc * jnp.exp(cum)[..., None], states_in)
+    y = y + y_inter
+    y = y.reshape(Bsz, S, H, Pd)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype)
+
+
+def ssm_forward(p, h, cfg: ArchConfig, chunk: int = 256):
+    """Train/prefill forward. h (B,S,d) -> (B,S,d)."""
+    di, N, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, _ = h.shape
+    z = jnp.einsum("bsd,de->bse", h, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", h, p["wx"])
+    Bc = jnp.einsum("bsd,de->bse", h, p["wB"])
+    Cc = jnp.einsum("bsd,de->bse", h, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", h, p["wdt"])
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+    Bc = jax.nn.silu(_causal_conv(Bc, p["conv_B"]))
+    Cc = jax.nn.silu(_causal_conv(Cc, p["conv_C"]))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xs.reshape(B, S, nh, hd), dt, A,
+                    Bc.reshape(B, S, G, N), Cc.reshape(B, S, G, N),
+                    p["D"].astype(jnp.float32), chunk=chunk)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["wout"])
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state update per token
+# ---------------------------------------------------------------------------
+def ssm_cache_template(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, N, nh, hd, k = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    C = di + 2 * G * N
+    return {
+        "state": jax.ShapeDtypeStruct((batch, nh, hd, N), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, k - 1, C), dtype),
+    }
+
+
+def ssm_decode_step(p, h, cfg: ArchConfig, cache):
+    """h (B,1,d); cache {'state': (B,nh,hd,N), 'conv': (B,k-1,di+2GN)}."""
+    di, N, nh, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = h.shape[0]
+    x1 = h[:, 0]
+    z = x1 @ p["wz"]
+    raw = jnp.concatenate([x1 @ p["wx"], x1 @ p["wB"], x1 @ p["wC"]], -1)  # (B,C)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], -1)  # (k,C)
+    hist = jnp.concatenate([cache["conv"].astype(raw.dtype), raw[:, None]], 1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(x1 @ p["wdt"] + p["dt_bias"].astype(x1.dtype))  # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * A)  # (B,nh)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    Bh = jnp.repeat(Bc.reshape(B, G, N), nh // G, 1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, G, N), nh // G, 1).astype(jnp.float32)
+    state = cache["state"] * decay[..., None, None] + \
+        (dt.astype(jnp.float32)[..., None] * xh)[..., None] * Bh[:, :, None]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z).astype(jnp.float32), p["norm"], cfg.norm_eps)
+    out = (y @ p["wout"].astype(y.dtype)).astype(h.dtype)
+    new_cache = {"state": state, "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+    return out[:, None], new_cache

@@ -1,0 +1,349 @@
+"""Model assembly: scan-over-layers transformer / SSM / hybrid, with
+train-forward, prefill (cache construction) and decode (cache consumption).
+
+Scan-over-layers keeps the HLO O(1) in depth — essential for fast 512-device
+dry-run compiles — and layer params carry a leading 'layers' axis. Decode
+threads the per-layer KV/SSM caches through the scan as (xs -> ys): the
+updated cache slices are re-stacked by scan itself, so caches are updated
+functionally with no dynamic indexing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, mlp, moe, ssm
+from repro.models.layers import cross_entropy, embed_tokens, rms_norm, softcap, unembed
+from repro.models.params import ParamSpec, tree_map_specs
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+def _norm(d):
+    return ParamSpec((d,), ("embed",), init="zeros")
+
+
+def layer_template(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {"ln": _norm(d), "ssm": ssm.ssm_template(cfg)}
+    t = {"ln1": _norm(d), "attn": attention.attn_template(cfg), "ln2": _norm(d)}
+    if cfg.num_experts:
+        t["moe"] = moe.moe_template(cfg)
+    else:
+        t["mlp"] = mlp.mlp_template(d, cfg.d_ff)
+    if cfg.local_global:  # gemma2 post-norms
+        t["ln1post"] = _norm(d)
+        t["ln2post"] = _norm(d)
+    return t
+
+
+def shared_block_template(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {"ln1": _norm(d), "attn": attention.attn_template(cfg),
+            "ln2": _norm(d), "mlp": mlp.mlp_template(d, cfg.d_ff)}
+
+
+def model_template(cfg: ArchConfig) -> dict:
+    d, Vp, L = cfg.d_model, cfg.padded_vocab, cfg.num_layers
+    t = {"embed": ParamSpec((Vp, d), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        t["unembed"] = ParamSpec((d, Vp), ("embed", "vocab"))
+    t["final_norm"] = _norm(d)
+    lt = layer_template(cfg)
+    t["layers"] = tree_map_specs(
+        lambda s: ParamSpec((L,) + s.shape, ("layers",) + s.axes, s.init, s.scale), lt)
+    if cfg.family == "hybrid":
+        t["shared"] = shared_block_template(cfg)
+    return t
+
+
+def n_attn_sites(cfg: ArchConfig) -> int:
+    return cfg.num_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+# ---------------------------------------------------------------------------
+# Per-layer blocks
+# ---------------------------------------------------------------------------
+def _attn_block(p, h, cfg, positions, window, pspec_fn):
+    a, kv = attention.attn_forward(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                                   cfg, positions, window=window)
+    # names for the 'collectives' remat policy: saving the TP-psum outputs
+    # means the rematerialized forward never re-runs the layer's collectives
+    a = checkpoint_name(a, "attn_out")
+    if "ln1post" in p:
+        a = rms_norm(a, p["ln1post"], cfg.norm_eps)
+    h = h + a
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe.moe_forward(p["moe"], x, cfg, pspec_fn=pspec_fn)
+    else:
+        m, aux = mlp.mlp_forward(p["mlp"], x), 0.0
+    m = checkpoint_name(m, "mlp_out")
+    if "ln2post" in p:
+        m = rms_norm(m, p["ln2post"], cfg.norm_eps)
+    return h + m, aux, kv
+
+
+def _ssm_block(p, h, cfg):
+    return h + ssm.ssm_forward(p["ssm"], rms_norm(h, p["ln"], cfg.norm_eps), cfg,
+                               chunk=min(cfg.ssm_chunk, h.shape[1]))
+
+
+def _cond_window(cfg: ArchConfig, flag, fn):
+    """gemma2: even layers local (sliding window), odd global. `fn(window)`
+    must be shape-stable; both branches are compiled (window is static)."""
+    if not cfg.local_global:
+        return fn(0)
+    return jax.lax.cond(flag,
+                        lambda _: fn(cfg.sliding_window),
+                        lambda _: fn(0), None)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ArchConfig, *, frontend_embeds=None,
+            remat: str = "dots", pspec_fn=None, collect_cache: bool = False,
+            mesh=None, long_context: bool = False, last_only: bool = False,
+            unroll: int = 1):
+    """tokens (B,S) -> logits (B,S_total,Vp) f32 [, cache]."""
+    h = embed_tokens(params["embed"], tokens)
+    if cfg.local_global:  # gemma scales embeddings
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+    if frontend_embeds is not None:
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    if pspec_fn is not None:
+        h = jax.lax.with_sharding_constraint(h, pspec_fn(("batch", None, None)))
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
+    L = cfg.num_layers
+
+    aux_total = jnp.float32(0.0)
+
+    def _constrain(x):
+        if pspec_fn is not None:
+            return jax.lax.with_sharding_constraint(x, pspec_fn(("batch", None, None)))
+        return x
+
+    if cfg.family in ("ssm", "hybrid"):
+        def body(carry, xs):
+            hh = _constrain(carry)
+            lp = xs
+            hh = _constrain(_ssm_block(lp, hh, cfg))
+            return hh, None
+
+        body = _maybe_remat(body, remat)
+        if cfg.family == "ssm":
+            h, _ = jax.lax.scan(body, h, params["layers"], unroll=unroll)
+        else:
+            # hybrid: shared attn block every attn_every ssm blocks
+            window = cfg.sliding_window if long_context else 0
+            sites = (jnp.arange(L) + 1) % cfg.attn_every == 0
+
+            def hbody(carry, xs):
+                hh = _constrain(carry)
+                lp, is_site = xs
+                hh = _constrain(_ssm_block(lp, hh, cfg))
+
+                def with_attn(x):
+                    a, _ = attention.attn_forward(
+                        params["shared"]["attn"],
+                        rms_norm(x, params["shared"]["ln1"], cfg.norm_eps),
+                        cfg, positions, window=window)
+                    x = x + a
+                    m = mlp.mlp_forward(params["shared"]["mlp"],
+                                        rms_norm(x, params["shared"]["ln2"], cfg.norm_eps))
+                    return x + m
+
+                hh = jax.lax.cond(is_site, with_attn, lambda x: x, hh)
+                return hh, None
+
+            hbody = _maybe_remat(hbody, remat)
+            h, _ = jax.lax.scan(hbody, h, (params["layers"], sites), unroll=unroll)
+    else:
+        flags = jnp.arange(L) % 2 == 0  # gemma2 local/global alternation
+
+        def body(carry, xs):
+            hh, aux = carry
+            hh = _constrain(hh)
+            lp, flag = xs
+            hh, a, kv = _cond_window(
+                cfg, flag,
+                lambda w: _attn_block(lp, hh, cfg, positions, w, pspec_fn))
+            return (_constrain(hh), aux + a), (kv if collect_cache else None)
+
+        body = _maybe_remat(body, remat)
+        (h, aux_total), caches = jax.lax.scan(body, (h, aux_total),
+                                              (params["layers"], flags),
+                                              unroll=unroll)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    wout = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(h, wout, cfg.final_logit_softcap)
+    if collect_cache and cfg.family not in ("ssm", "hybrid"):
+        return logits, caches, aux_total
+    return logits, None, aux_total
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if remat == "collectives":
+        # save exactly the two TP-psum'd block outputs per layer: the
+        # rematerialized backward re-runs local compute but NOT the model-
+        # axis all-reduces (collective-bound cells trade ~2 x (B,S,d)/layer
+        # of extra saved memory for 1/3 fewer activation ARs). §Perf.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out"))
+    return jax.checkpoint(fn)  # 'full'
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat="dots", pspec_fn=None,
+            aux_weight: float = 0.01, unroll: int = 1):
+    logits, _, aux = forward(params, batch["tokens"], cfg,
+                             frontend_embeds=batch.get("frontend_embeds"),
+                             remat=remat, pspec_fn=pspec_fn, unroll=unroll)
+    if pspec_fn is not None:
+        # keep the (B,S,V) logits — and everything derived from them
+        # (one-hot, pad mask) — sharded over the vocab/model axis; without
+        # this the 256k-vocab archs materialize ~50 GB of f32 per device.
+        logits = jax.lax.with_sharding_constraint(
+            logits, pspec_fn(("batch", None, "vocab")))
+    targets = batch["targets"]
+    F = logits.shape[1] - targets.shape[1]
+    if F > 0:  # frontend positions carry no loss
+        logits = logits[:, F:]
+    ce = cross_entropy(logits, targets, cfg.vocab_size)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *, mesh=None,
+                decode_mode: str = "heads", long_context: bool = False,
+                unroll: int = 1, pspec_fn=None):
+    """tokens (B,1), pos (B,) -> (logits (B,Vp), new cache).
+
+    cache:
+      transformer: {'k': (L,B,S,KV,hd), 'v': (L,B,S,KV,hd)}
+      ssm:         {'state': (L,B,nh,hd,N), 'conv': (L,B,k-1,C)}
+      hybrid:      ssm cache + {'ak','av': (sites,B,S,KV,hd)}
+    """
+    h = embed_tokens(params["embed"], tokens)
+    if cfg.local_global:
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+    L = cfg.num_layers
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "ssm":
+            def body(carry, xs):
+                hh = carry
+                lp, ck = xs
+                x = rms_norm(hh, lp["ln"], cfg.norm_eps)
+                y, ck2 = ssm.ssm_decode_step(lp["ssm"], x, cfg, ck)
+                return hh + y, ck2
+
+            h, new_cache = jax.lax.scan(
+                body, h,
+                (params["layers"],
+                 {"state": cache["state"], "conv": cache["conv"]}),
+                unroll=unroll)
+        else:
+            sites = (jnp.arange(L) + 1) % cfg.attn_every == 0
+            window = cfg.sliding_window if long_context else 0
+
+            def body(carry, xs):
+                hh, site_idx, ak, av = carry
+                lp, is_site, ck = xs
+                x = rms_norm(hh, lp["ln"], cfg.norm_eps)
+                y, ck2 = ssm.ssm_decode_step(lp["ssm"], x, cfg, ck)
+                hh = hh + y
+
+                def with_attn(args):
+                    x, ak, av = args
+                    k_i = jax.lax.dynamic_index_in_dim(ak, site_idx, 0, keepdims=False)
+                    v_i = jax.lax.dynamic_index_in_dim(av, site_idx, 0, keepdims=False)
+                    a, (k2, v2) = _decode_attn(
+                        params["shared"]["attn"],
+                        rms_norm(x, params["shared"]["ln1"], cfg.norm_eps),
+                        cfg, k_i, v_i, pos, mesh, decode_mode, window)
+                    x = x + a
+                    m = mlp.mlp_forward(params["shared"]["mlp"],
+                                        rms_norm(x, params["shared"]["ln2"], cfg.norm_eps))
+                    ak = jax.lax.dynamic_update_index_in_dim(ak, k2, site_idx, 0)
+                    av = jax.lax.dynamic_update_index_in_dim(av, v2, site_idx, 0)
+                    return x + m, ak, av
+
+                hh, ak, av = jax.lax.cond(
+                    is_site, with_attn, lambda a: a, (hh, ak, av))
+                site_idx = site_idx + is_site.astype(jnp.int32)
+                return (hh, site_idx, ak, av), ck2
+
+            (h, _, ak, av), ssm_cache = jax.lax.scan(
+                body, (h, jnp.int32(0), cache["ak"], cache["av"]),
+                (params["layers"], sites,
+                 {"state": cache["state"], "conv": cache["conv"]}),
+                unroll=unroll)
+            new_cache = dict(ssm_cache, ak=ak, av=av)
+    else:
+        flags = jnp.arange(L) % 2 == 0
+
+        # KV caches ride in the scan CARRY and are updated in place with
+        # dynamic_update_index_in_dim — XLA aliases loop-carried buffers, so
+        # decode holds exactly ONE copy of the cache (the xs->ys formulation
+        # would keep input and re-stacked output alive simultaneously).
+        def body(carry, xs):
+            hh, ck, cv, li = carry
+            lp, flag = xs
+            k_i = jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False)
+            v_i = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
+            x = rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, (k2, v2) = _cond_window(
+                cfg, flag,
+                lambda w: _decode_attn(lp["attn"], x, cfg, k_i, v_i, pos,
+                                       mesh, decode_mode, w))
+            ck = jax.lax.dynamic_update_index_in_dim(ck, k2.astype(ck.dtype), li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, v2.astype(cv.dtype), li, 0)
+            if "ln1post" in lp:
+                a = rms_norm(a, lp["ln1post"], cfg.norm_eps)
+            hh = hh + a
+            x = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                m, _ = moe.moe_forward(lp["moe"], x, cfg, pspec_fn=pspec_fn)
+            else:
+                m = mlp.mlp_forward(lp["mlp"], x)
+            if "ln2post" in lp:
+                m = rms_norm(m, lp["ln2post"], cfg.norm_eps)
+            return (hh + m, ck, cv, li + 1), None
+
+        (h, ck, cv, _), _ = jax.lax.scan(
+            body, (h, cache["k"], cache["v"], jnp.int32(0)),
+            (params["layers"], flags), unroll=unroll)
+        new_cache = {"k": ck, "v": cv}
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    wout = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(h, wout, cfg.final_logit_softcap)
+    return logits[:, 0], new_cache
+
+
+def _decode_attn(p, x, cfg, k_cache, v_cache, pos, mesh, mode, window):
+    if mode == "seq" and mesh is not None:
+        baxes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        return attention.decode_attn_seq(p, x, cfg, k_cache, v_cache, pos, mesh,
+                                         window=window, batch_axes=baxes)
+    return attention.decode_attn_heads(p, x, cfg, k_cache, v_cache, pos,
+                                       window=window)

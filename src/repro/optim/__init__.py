@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OPTIMIZERS, Optimizer, adafactor, adamw,
+                                    momentum, sgd, zero1_pspecs)
+from repro.optim.sodda_optimizer import SoddaSVRGConfig, make_sodda_svrg
+
+__all__ = ["OPTIMIZERS", "Optimizer", "sgd", "momentum", "adamw", "adafactor",
+           "zero1_pspecs", "make_sodda_svrg", "SoddaSVRGConfig"]

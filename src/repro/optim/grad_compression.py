@@ -1,0 +1,74 @@
+"""Gradient compression for data-parallel reductions.
+
+``compressed_psum`` is a true wire-level int8 all-reduce:
+  1. quantize locally with a shared global scale (one scalar pmax),
+  2. int8 all_to_all (reduce-scatter phase: each device receives its 1/n
+     chunk from everyone and accumulates in int32 — no overflow, n*127 <<
+     2^31),
+  3. requantize the reduced chunk and int8 all_gather.
+
+Wire bytes: 2 * (n-1)/n * size * 1B  — 4x less than an f32 ring all-reduce
+(2 * (n-1)/n * size * 4B). ``compressed_psum_ef`` adds error feedback (the
+fp32 quantization residual is carried to the next step), which makes the
+long-run average unbiased (EF-SGD). SODDA's snapshot psum composes this
+with the paper's own C^t masking.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _axis_size(axis: str) -> int:
+    return jax.lax.psum(1, axis)
+
+
+def compressed_psum(x, axis: str):
+    """int8-wire psum along a shard_map axis. Returns fp32, same shape."""
+    n = _axis_size(axis)
+    shape, size = x.shape, x.size
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    absmax = jax.lax.pmax(jnp.max(jnp.abs(flat)), axis)
+    s1 = jnp.maximum(absmax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(flat / s1), -127, 127).astype(jnp.int8)
+    q = q.reshape(n, -1)
+    # reduce-scatter phase: int8 on the wire, int32 accumulation locally
+    recv = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=False)
+    chunk = recv.astype(jnp.int32).sum(axis=0).astype(jnp.float32) * s1
+    # requantize the reduced chunk with a fresh global scale, then gather
+    absmax2 = jax.lax.pmax(jnp.max(jnp.abs(chunk)), axis)
+    s2 = jnp.maximum(absmax2, 1e-20) / 127.0
+    q2 = jnp.clip(jnp.round(chunk / s2), -127, 127).astype(jnp.int8)
+    out = jax.lax.all_gather(q2, axis).reshape(-1).astype(jnp.float32) * s2
+    return out[:size].reshape(shape)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: jnp.ndarray
+
+    @classmethod
+    def init(cls, x):
+        return cls(residual=jnp.zeros_like(x, dtype=jnp.float32))
+
+
+def compressed_psum_ef(x, ef: ErrorFeedback, axis: str):
+    """Error-feedback variant: local quantization residual carried across
+    steps; the time-average of the outputs is unbiased."""
+    xc = x.astype(jnp.float32) + ef.residual
+    out = compressed_psum(xc, axis)
+    n = _axis_size(axis)
+    # local residual: what this device's contribution lost to quantization
+    absmax = jax.lax.pmax(jnp.max(jnp.abs(xc)), axis)
+    s1 = jnp.maximum(absmax, 1e-20) / 127.0
+    deq = jnp.clip(jnp.round(xc / s1), -127, 127).astype(jnp.float32) * s1
+    new_ef = ErrorFeedback(residual=xc - deq)
+    return out, new_ef
+
+
+def quantize(x, scale):
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)

@@ -1,0 +1,165 @@
+"""Minimal pytree optimizers (no optax in this environment) + ZeRO-1 rules.
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, params, step)
+-> (new_params, new_state)``. Learning rate may be a float or a schedule
+``f(step) -> float``. State dtypes are configurable so the biggest archs can
+run bf16/int8 optimizer state (see DESIGN.md §5 / EXPERIMENTS.md kimi notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+Schedule = Union[float, Callable]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _lr(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        g = _lr(lr, step)
+        new = jax.tree.map(lambda p, gr: (p - g * gr.astype(jnp.float32)).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+    def update(grads, state, params, step):
+        g = _lr(lr, step)
+        new_m = jax.tree.map(
+            lambda m, gr: (beta * m.astype(jnp.float32)
+                           + gr.astype(jnp.float32)).astype(state_dtype),
+            state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p - g * m.astype(jnp.float32)).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        g = _lr(lr, step)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, gr, m, v):
+            gr = gr.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gr
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gr * gr
+            step_ = g * (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            if weight_decay:
+                step_ = step_ + g * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), \
+                m2.astype(state_dtype), v2.astype(state_dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, gr, m, v) for p, gr, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Schedule, decay: float = 0.8, eps: float = 1e-30,
+              clip: float = 1.0) -> Optimizer:
+    """Factored second moment (row/col) — O(n+m) state for (n,m) params;
+    the practical choice for the 480B/1T MoE archs."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        g = _lr(lr, step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def one(p, gr, st):
+            gr = gr.astype(jnp.float32)
+            g2 = gr * gr + eps
+            if _factored(p.shape):
+                r = beta * st["r"] + (1 - beta) * g2.mean(-1)
+                c = beta * st["c"] + (1 - beta) * g2.mean(-2)
+                denom = (r[..., None] * c[..., None, :]) / jnp.maximum(
+                    r.mean(-1, keepdims=True)[..., None], eps)
+                u = gr / jnp.sqrt(denom + eps)
+                new_st = {"r": r, "c": c}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = gr / jnp.sqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS <= clip)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip)
+            return (p.astype(jnp.float32) - g * u).astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [one(p, gr, st) for p, gr, st in zip(flat_p, flat_g, flat_s)]
+        return treedef.unflatten([o[0] for o in out]), \
+            treedef.unflatten([o[1] for o in out])
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adamw": adamw,
+              "adafactor": adafactor}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer state over the data axis on top of the param spec.
+# ---------------------------------------------------------------------------
+def zero1_pspecs(param_pspec: PartitionSpec, shape, mesh: Mesh,
+                 axis: str = "data") -> PartitionSpec:
+    """Add `axis` to the first dim that is unsharded and divisible by it."""
+    n = mesh.shape[axis]
+    specs = list(param_pspec) + [None] * (len(shape) - len(param_pspec))
+    used = {a for s in specs if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))}
+    if axis in used:
+        return PartitionSpec(*specs)
+    for i, (dim, s) in enumerate(zip(shape, specs)):
+        if s is None and dim % n == 0 and dim >= n:
+            specs[i] = axis
+            return PartitionSpec(*specs)
+    return PartitionSpec(*specs)

@@ -1,0 +1,89 @@
+"""SODDA-SVRG: the paper's optimizer generalized to deep networks.
+
+The paper's three stochastic components map onto deep-net training as:
+  * D^t (observation sampling)  -> the snapshot gradient mu is estimated on a
+    d-fraction subsample of the snapshot batch (vs. full-epoch gradients in
+    classic SVRG / RADiSA);
+  * C^t (coordinate sampling)   -> a c-fraction random coordinate mask is
+    applied to mu (fresh mask each refresh);
+  * pi_q (block assignment)     -> an optional block-cyclic coordinate mask
+    rotates which parameter block receives the variance-reduced update each
+    step (conflict-free across data-parallel groups by construction, since
+    every group applies the same mask to the same psum'd gradient).
+
+Update (paper step 16, pytree form):
+    params <- params - gamma * [ grad(params, mb) - grad(snap, mb) + mu ]
+
+The caller's train step supplies both gradients (see launch/train.py); this
+module owns the state machine (snapshot refresh cadence, masks) so the
+algorithm is testable in isolation. Theory only covers the convex case —
+this integration is the beyond-paper extension flagged in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SoddaSVRGConfig:
+    lr: float = 0.01
+    refresh_every: int = 50  # outer-iteration length (L in the paper)
+    c_frac: float = 0.8  # coordinate fraction of the snapshot gradient
+    d_frac: float = 0.85  # sub-batch fraction for the snapshot gradient
+    block_cyclic: int = 0  # >0: rotate updates over this many param blocks
+
+
+def make_sodda_svrg(cfg: SoddaSVRGConfig):
+    def init(params):
+        return {
+            "snap": jax.tree.map(jnp.asarray, params),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32),
+            "key": jax.random.PRNGKey(17),
+        }
+
+    def needs_refresh(state):
+        return state["step"] % cfg.refresh_every == 0
+
+    def refresh(state, params, snap_grads):
+        """snap_grads: gradient at `params` on the d-sampled sub-batch."""
+        key = jax.random.fold_in(state["key"], state["step"])
+
+        def mask_leaf(path_i, g):
+            k = jax.random.fold_in(key, path_i)
+            m = jax.random.bernoulli(k, cfg.c_frac, g.shape)
+            return jnp.where(m, g / cfg.c_frac, 0.0).astype(g.dtype)
+
+        leaves, treedef = jax.tree.flatten(snap_grads)
+        mu = treedef.unflatten([mask_leaf(i, g) for i, g in enumerate(leaves)])
+        return dict(state, snap=jax.tree.map(jnp.asarray, params), mu=mu)
+
+    def update(params, state, grads_at_params, grads_at_snap):
+        gamma = jnp.float32(cfg.lr)
+        step = state["step"]
+
+        def one(i, p, g1, g0, mu):
+            corr = g1.astype(jnp.float32) - g0.astype(jnp.float32) + mu.astype(jnp.float32)
+            if cfg.block_cyclic > 0:
+                k = jax.random.fold_in(jax.random.fold_in(state["key"], step), i)
+                blk = jax.random.randint(k, (), 0, cfg.block_cyclic)
+                idx = (jnp.arange(corr.size) * cfg.block_cyclic // corr.size
+                       ).reshape(corr.shape)
+                corr = jnp.where(idx == blk, corr * cfg.block_cyclic, 0.0)
+            return (p.astype(jnp.float32) - gamma * corr).astype(p.dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g1 = treedef.flatten_up_to(grads_at_params)
+        flat_g0 = treedef.flatten_up_to(grads_at_snap)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        new_p = treedef.unflatten(
+            [one(i, *args) for i, args in
+             enumerate(zip(flat_p, flat_g1, flat_g0, flat_mu))])
+        return new_p, dict(state, step=step + 1)
+
+    return {"init": init, "update": update, "refresh": refresh,
+            "needs_refresh": needs_refresh, "cfg": cfg}

@@ -1,0 +1,5 @@
+import warnings
+
+warnings.filterwarnings(
+    "ignore", message=".*default axis_types will change.*",
+    category=DeprecationWarning)

@@ -1,0 +1,97 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.distributed.fault_tolerance import (StragglerPolicy, TrainSupervisor,
+                                               rescale_plan)
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones(5)},
+            "d": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 10, tree(), extra={"note": "x"})
+    step, restored, extra = restore_checkpoint(d, tree())
+    assert step == 10 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(tree()), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_latest_and_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, tree(), keep=2)
+    assert latest_step(d) == 5
+    kept = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert len(kept) == 2
+
+
+def test_corruption_detected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    path = save_checkpoint(d, 1, tree())
+    victim = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, victim))
+    arr = np.asarray(arr).copy()
+    arr.flat[0] += 1
+    np.save(os.path.join(path, victim), arr)
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(d, tree())
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree())
+    # simulate a crash mid-save at step 2
+    path2 = os.path.join(d, "step_0000000002")
+    os.makedirs(path2)
+    assert latest_step(d) == 1
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    """Inject a fault at step 7; training must restore and complete with the
+    exact same final state as a fault-free run (determinism)."""
+    def run(with_fault):
+        d = str(tmp_path / ("sup_f" if with_fault else "sup_c"))
+        ckpt = CheckpointManager(d, every=5)
+        sup = TrainSupervisor(ckpt, max_restarts=2)
+        fault = {"armed": with_fault}
+
+        def make_state():
+            return {"w": jnp.zeros(4)}
+
+        def step_fn(state, step, extra):
+            if fault["armed"] and step == 7:
+                fault["armed"] = False
+                raise RuntimeError("injected preemption")
+            return {"w": state["w"] + jnp.float32(step)}
+
+        return sup.run(10, make_state, make_state, step_fn), sup
+
+    s_fault, sup = run(True)
+    s_clean, _ = run(False)
+    np.testing.assert_array_equal(s_fault["w"], s_clean["w"])
+    assert sup.restarts == 1
+    assert any(e.startswith("restart@7") for e in sup.events)
+
+
+def test_straggler_policy_flags_outlier():
+    sp = StragglerPolicy(window=20, z_threshold=3.0)
+    for _ in range(20):
+        assert not sp.record(0.1)
+    assert sp.record(1.5)  # 15x the median step time
+
+
+def test_rescale_plan_elastic_shrink():
+    plan, moved = rescale_plan(8, 6, n_per_partition=100)
+    assert set(plan) == set(range(6))
+    absorbed = sorted(p for v in plan.values() for p in v)
+    assert absorbed == list(range(8))  # every partition still owned
+    assert moved == 200  # only the two lost partitions move

@@ -1,0 +1,158 @@
+"""Distributed-correctness tests.
+
+The shard_map SODDA equivalence needs a (P=4 x Q=3)=12-device mesh, so it
+runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=12
+(the main pytest process must keep seeing 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_EQUIV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+import json
+import jax, jax.numpy as jnp
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import sodda
+from repro.core.distributed import make_distributed_step, distributed_objective
+from repro.data.synthetic import make_svm_data
+
+cfg = SoddaConfig(P=4, Q=3, n=120, m=24, L=8, lr0=0.05)
+X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
+mesh = jax.make_mesh((4, 3), ("data", "model"))
+
+state = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
+step_d = make_distributed_step(mesh, cfg)
+obj_d = distributed_objective(mesh, cfg)
+
+s_ref, s_dist = state, state
+errs = []
+for t in range(5):
+    s_ref = sodda.sodda_step(s_ref, X, y, cfg)
+    s_dist = step_d(s_dist, X, y)
+    errs.append(float(jnp.max(jnp.abs(s_ref.w - s_dist.w))))
+scale = float(jnp.max(jnp.abs(s_ref.w)))
+fd = float(obj_d(X, y, s_dist.w))
+import repro.core.losses as losses
+fr = float(losses.objective(cfg.loss, X, y, s_dist.w))
+print(json.dumps({"errs": errs, "scale": scale, "obj_dist": fd, "obj_ref": fr}))
+"""
+
+
+@pytest.fixture(scope="module")
+def equiv_result():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _EQUIV_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_shard_map_sodda_matches_reference(equiv_result):
+    """5 outer iterations on a 4x3 device grid: the doubly-distributed
+    shard_map implementation must track the single-host reference to f32
+    reduction-order tolerance."""
+    r = equiv_result
+    assert max(r["errs"]) < 1e-4 * max(r["scale"], 1.0), r
+
+
+def test_distributed_objective_matches(equiv_result):
+    r = equiv_result
+    np.testing.assert_allclose(r["obj_dist"], r["obj_ref"], rtol=1e-5)
+
+
+def test_compressed_psum_roundtrip():
+    """int8-quantized psum vs exact psum on a 1-device mesh (semantics) —
+    and error feedback drives the average bias to ~0 over steps."""
+    from repro.optim.grad_compression import (ErrorFeedback, compressed_psum,
+                                              compressed_psum_ef)
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+
+    def f(x):
+        return compressed_psum(x, "d")
+
+    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+                                out_specs=jax.sharding.PartitionSpec(),
+                                check_vma=False))(x)
+    # two quantizations, each with error <= scale/2 = absmax/254
+    assert float(jnp.max(jnp.abs(out - x))) <= float(jnp.max(jnp.abs(x))) / 100
+
+    def g(x, res):
+        ef = ErrorFeedback(residual=res)
+        out, ef2 = compressed_psum_ef(x, ef, "d")
+        return out, ef2.residual
+
+    gj = jax.jit(jax.shard_map(
+        g, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
+        out_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
+        check_vma=False))
+    res = jnp.zeros((256,))
+    acc = jnp.zeros((256,))
+    for _ in range(64):
+        out, res = gj(x, res)
+        acc = acc + out
+    # with error feedback the time-average converges to the true value
+    np.testing.assert_allclose(acc / 64, x, atol=5e-3 * float(jnp.max(jnp.abs(x))))
+
+
+_COMPRESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+import json
+import jax
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import sodda
+from repro.core.distributed import make_distributed_step, distributed_objective
+from repro.data.synthetic import make_svm_data
+cfg = SoddaConfig(P=4, Q=3, n=500, m=120, L=8, lr0=0.05)
+X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
+mesh = jax.make_mesh((4, 3), ("data", "model"))
+obj = distributed_objective(mesh, cfg)
+out = {}
+for name, kw in {"exact": {}, "q8": dict(compress_mu=True, compress_z=True)}.items():
+    step = make_distributed_step(mesh, cfg, **kw)
+    s = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
+    for _ in range(15):
+        s = step(s, X, y)
+    out[name] = float(obj(X, y, s.w))
+print(json.dumps(out))
+"""
+
+
+def test_compressed_collectives_preserve_convergence():
+    """int8 z/mu wires (§Perf cell A it3) must not degrade SODDA."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _COMPRESS_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    r = json.loads(out.stdout.strip().splitlines()[-1])
+    assert r["exact"] < 0.6  # converged meaningfully
+    assert abs(r["q8"] - r["exact"]) < 0.05 * max(r["exact"], 0.1), r
+
+
+def test_sharding_rules_cover_all_archs():
+    from repro.configs import get_config, list_archs
+    from repro.distributed.sharding_rules import batch_axes, decode_mode, rules_for
+    from repro.configs import SHAPES
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for name in list_archs():
+        cfg = get_config(name)
+        rules = rules_for(cfg, mesh)
+        assert "vocab" in rules and "batch" in rules
+        for shape in SHAPES.values():
+            axes = batch_axes(cfg, shape, mesh)
+            assert isinstance(axes, tuple)
+        assert decode_mode(cfg, mesh) in ("heads", "seq", "none")

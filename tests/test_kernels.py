@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sodda_inner import sodda_inner_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# ---------------------------------------------------------------------------
+# sodda_inner
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,L,mt", [(1, 4, 128), (6, 16, 128), (3, 32, 256),
+                                    (2, 8, 384)])
+@pytest.mark.parametrize("loss", ["hinge", "logistic", "squared"])
+def test_sodda_inner_shapes(B, L, mt, loss):
+    w0 = jax.random.normal(k(1), (B, mt)) * 0.1
+    Xl = jax.random.normal(k(2), (B, L, mt))
+    yl = jnp.sign(jax.random.normal(k(3), (B, L)))
+    mu = jax.random.normal(k(4), (B, mt)) * 0.01
+    out = sodda_inner_pallas(w0, Xl, yl, mu, 0.03, loss)
+    want = ref.sodda_inner_ref(w0, Xl, yl, mu, 0.03, loss)
+    # the kernel hoists z0 = Xl @ w0 into one matvec (different fp
+    # accumulation order than the per-step dots of the reference)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=2e-5)
+
+
+def test_sodda_inner_ops_padding():
+    """ops wrapper pads mt to 128; padding must be exact."""
+    B, L, mt = 2, 8, 100  # deliberately unaligned
+    w0 = jax.random.normal(k(5), (B, mt)) * 0.1
+    Xl = jax.random.normal(k(6), (B, L, mt))
+    yl = jnp.sign(jax.random.normal(k(7), (B, L)))
+    mu = jax.random.normal(k(8), (B, mt)) * 0.01
+    out = ops.sodda_inner(w0, Xl, yl, mu, 0.05, "hinge", force="pallas")
+    want = ref.sodda_inner_ref(w0, Xl, yl, mu, 0.05, "hinge")
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,S,D", [(1, 4, 4, 128, 64), (2, 4, 2, 256, 64),
+                                        (1, 8, 2, 128, 128)])
+@pytest.mark.parametrize("opts", [dict(causal=True),
+                                  dict(causal=True, window=64),
+                                  dict(causal=True, softcap=30.0),
+                                  dict(causal=False)])
+def test_flash_attention_shapes(B, H, KV, S, D, opts):
+    q = jax.random.normal(k(10), (B, H, S, D), jnp.float32) * 0.5
+    kk = jax.random.normal(k(11), (B, KV, S, D), jnp.float32) * 0.5
+    v = jax.random.normal(k(12), (B, KV, S, D), jnp.float32)
+    out = flash_attention_pallas(q, kk, v, bq=64, bk=64, **opts)
+    want = ref.attention_naive(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), **opts).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, H, KV, S, D = 1, 2, 2, 128, 64
+    q = (jax.random.normal(k(13), (B, H, S, D)) * 0.5).astype(jnp.bfloat16)
+    kk = (jax.random.normal(k(14), (B, KV, S, D)) * 0.5).astype(jnp.bfloat16)
+    v = jax.random.normal(k(15), (B, KV, S, D)).astype(jnp.bfloat16)
+    out = flash_attention_pallas(q, kk, v, bq=64, bk=64, causal=True)
+    want = ref.attention_naive(
+        q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out.astype(jnp.float32), want.astype(jnp.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_attention_ref_matches_naive():
+    """the chunked online-softmax reference itself vs textbook attention."""
+    B, S, H, KV, D = 2, 200, 4, 2, 32  # non-chunk-aligned S
+    q = jax.random.normal(k(16), (B, S, H, D)) * 0.3
+    kk = jax.random.normal(k(17), (B, S, KV, D)) * 0.3
+    v = jax.random.normal(k(18), (B, S, KV, D))
+    got = ref.attention_ref(q, kk, v, causal=True, chunk=64)
+    want = ref.attention_naive(q, kk, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_decode_offset():
+    """q_offset reproduces the decode position semantics."""
+    B, S, H, D = 1, 96, 2, 32
+    q = jax.random.normal(k(19), (B, S, H, D)) * 0.3
+    kk = jax.random.normal(k(20), (B, S, H, D)) * 0.3
+    v = jax.random.normal(k(21), (B, S, H, D))
+    full = ref.attention_naive(q, kk, v, causal=True)
+    last = ref.attention_naive(q[:, -1:], kk, v, causal=True, q_offset=S - 1)
+    np.testing.assert_allclose(last[:, 0], full[:, -1], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 16), (2, 128, 4, 16, 2, 32, 32),
+    (1, 96, 2, 32, 1, 64, 32),
+])
+def test_ssd_scan_shapes(B, S, H, P, G, N, chunk):
+    x = jax.random.normal(k(30), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(31), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k(32), (H,)) * 0.3)
+    Bm = jax.random.normal(k(33), (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(k(34), (B, S, G, N)) * 0.3
+    want = ref.ssd_ref(x, dt, A, Bm, Cm)
+    got = ssd_scan_pallas(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A,
+                          Bm.transpose(0, 2, 1, 3), Cm.transpose(0, 2, 1, 3),
+                          chunk=chunk).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_jnp_matches_ref():
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, G, N = 2, 128, 4, 16, 1, 32
+    x = jax.random.normal(k(35), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(36), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k(37), (H,)) * 0.3)
+    Bm = jax.random.normal(k(38), (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(k(39), (B, S, G, N)) * 0.3
+    D = jnp.ones((H,))
+    want = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    got = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_ops_unaligned_seq():
+    B, S, H, P, G, N = 1, 100, 2, 16, 1, 16  # S not chunk-aligned -> pad path
+    x = jax.random.normal(k(40), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(41), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k(42), (H,)) * 0.3)
+    Bm = jax.random.normal(k(43), (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(k(44), (B, S, G, N)) * 0.3
+    got = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=32, force="pallas")
+    want = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,37 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+
+
+@pytest.mark.parametrize("name", ["hinge", "logistic", "squared"])
+def test_deriv_matches_autodiff(name):
+    """l'(z,y) must equal d/dz l(z,y) wherever l is differentiable."""
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (64,)) * 2.0
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (64,)))
+    if name == "hinge":  # avoid the kink
+        z = jnp.where(jnp.abs(1.0 - y * z) < 1e-3, z + 0.01, z)
+    val = lambda zz: losses.loss_value(name, zz, y).sum()
+    got = losses.loss_deriv(name, z, y)
+    want = jax.grad(val)(z)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_full_gradient_matches_autodiff():
+    key = jax.random.PRNGKey(1)
+    X = jax.random.normal(key, (32, 8))
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (32,)))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (8,)) * 0.1
+    for name in ("logistic", "squared"):
+        got = losses.full_gradient(name, X, y, w, l2=0.01)
+        want = jax.grad(lambda ww: losses.objective(name, X, y, ww, l2=0.01))(w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_objective_at_zero_is_one_for_hinge():
+    X = jnp.ones((4, 3))
+    y = jnp.array([1.0, -1.0, 1.0, -1.0])
+    assert float(losses.objective("hinge", X, y, jnp.zeros(3))) == 1.0

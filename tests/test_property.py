@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import losses, sodda
+from repro.core.partition import (_exact_count_mask, pi_permutations,
+                                  sample_iteration)
+from repro.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", settings(max_examples=20, deadline=None))
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_exact_count_mask_selects_exact_count(count, extra, seed):
+    n = count + extra
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    m = _exact_count_mask(u, count)
+    assert int(m.sum()) == count
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_pi_permutations_property(Q, P, seed):
+    pi = np.asarray(pi_permutations(jax.random.PRNGKey(seed), Q, P))
+    for q in range(Q):
+        assert sorted(pi[q].tolist()) == list(range(P))
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.2, 1.0), st.floats(0.1, 1.0))
+def test_nested_masks_C_subset_B(seed, b_frac, c_frac):
+    """Paper step 6: C^t must be a subset of B^t for any fractions."""
+    M = 64
+    b = max(1, int(b_frac * M))
+    c = max(1, min(b, int(c_frac * b)))
+    s = sample_iteration(jax.random.PRNGKey(seed), 0, 2, 2, 8, M, 4, b, c, 4)
+    assert int(s.mask_b.sum()) == b and int(s.mask_c.sum()) == c
+    assert bool(jnp.all(s.mask_c <= s.mask_b))  # C ⊆ B
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_sodda_step_preserves_shape_and_finiteness(seed):
+    cfg = SoddaConfig(P=2, Q=2, n=32, m=8, L=4, lr0=0.05)
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.uniform(key, (cfg.N, cfg.M), minval=-1, maxval=1)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (cfg.N,)))
+    y = jnp.where(y == 0, 1.0, y)
+    state = sodda.init_state(jax.random.fold_in(key, 2), cfg.M)
+    out = sodda.sodda_step(state, X, y, cfg)
+    assert out.w.shape == (cfg.M,)
+    assert bool(jnp.isfinite(out.w).all())
+    assert int(out.t) == int(state.t) + 1
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["hinge", "logistic", "squared"]))
+def test_inner_loop_zero_lr_is_identity(seed, loss):
+    key = jax.random.PRNGKey(seed)
+    w0 = jax.random.normal(key, (3, 16))
+    Xl = jax.random.normal(jax.random.fold_in(key, 1), (3, 5, 16))
+    yl = jnp.sign(jax.random.normal(jax.random.fold_in(key, 2), (3, 5)))
+    mu = jax.random.normal(jax.random.fold_in(key, 3), (3, 16))
+    out = ref.sodda_inner_ref(w0, Xl, yl, mu, 0.0, loss)
+    np.testing.assert_array_equal(out, w0)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_attention_rows_sum_to_one_invariant(seed):
+    """softmax invariance: scaling V scales output linearly; adding a
+    constant shift to all logits leaves attention unchanged."""
+    key = jax.random.PRNGKey(seed)
+    B, S, H, D = 1, 24, 2, 8
+    q = jax.random.normal(key, (B, S, H, D)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    o1 = ref.attention_ref(q, k, v, causal=True, chunk=8)
+    o2 = ref.attention_ref(q, k, v * 2.0, causal=True, chunk=8)
+    np.testing.assert_allclose(o2, 2.0 * o1, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_ssd_causality(seed, h_heads):
+    """SSD output at time t must not depend on inputs after t."""
+    key = jax.random.PRNGKey(seed)
+    B, S, P, N = 1, 32, 8, 8
+    x = jax.random.normal(key, (B, S, h_heads, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (B, S, h_heads)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h_heads,)) * 0.2)
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 1, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, 1, N)) * 0.3
+    y1 = ref.ssd_ref(x, dt, A, Bm, Cm)
+    x2 = x.at[:, S // 2:].set(99.0)  # corrupt the future
+    y2 = ref.ssd_ref(x2, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1[:, :S // 2], y2[:, :S // 2], rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_checkpoint_roundtrip_property(tmp_path_factory, seed):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    key = jax.random.PRNGKey(seed)
+    tree = {"x": jax.random.normal(key, (7, 3)),
+            "n": {"y": jax.random.randint(jax.random.fold_in(key, 1), (5,), 0, 100)}}
+    d = str(tmp_path_factory.mktemp("ck"))
+    save_checkpoint(d, seed % 1000, tree)
+    _, restored, _ = restore_checkpoint(d, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

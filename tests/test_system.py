@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests for the paper's system."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data.tokens import TokenPipeline, synthetic_token_batch
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import TrainSettings, make_train_step
+from repro.models import Model
+
+
+def test_train_reduces_loss_end_to_end():
+    """The full train_step (accum scan + optimizer + metrics) reduces loss
+    on a reduced mamba2 in a few dozen steps."""
+    cfg = reduced_config(get_config("mamba2-130m"))
+    mesh = make_local_mesh(1, 1)
+    model = Model(cfg, mesh=mesh, param_dtype=jnp.float32)
+    shape = ShapeConfig("t", "train", 64, 8)
+    settings = TrainSettings(optimizer="adamw", lr=3e-3, accum_steps=2,
+                             remat="dots", zero1=False)
+    step_fn, opt = make_train_step(model, shape, settings)
+    jitted = jax.jit(step_fn)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    pipe = TokenPipeline(seed=0, batch=8, seq_len=64, vocab_size=cfg.vocab_size)
+    losses = []
+    for step in range(30):
+        batch = pipe.next()
+        params, opt_state, metrics = jitted(params, opt_state, batch,
+                                            jnp.int32(step))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+def test_serve_prefill_then_decode_consistent():
+    """Prefill builds a cache; decoding the next token from it must equal
+    the teacher-forced forward logits at that position."""
+    cfg = reduced_config(get_config("phi3-mini-3.8b"))
+    model = Model(cfg, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = synthetic_token_batch(3, 0, 2, 17, cfg.vocab_size)["tokens"]
+    prompt, nxt = toks[:, :16], toks[:, 16:17]
+
+    last_logits, cache = jax.jit(model.prefill)(params, {"tokens": prompt})
+    # grow cache to full length
+    full_cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), model.cache_template(2, 32, jnp.float32))
+    full_cache = {k: full_cache[k].at[:, :, :16].set(cache[k].astype(full_cache[k].dtype))
+                  for k in ("k", "v")}
+    dec_logits, _ = jax.jit(model.decode)(params, full_cache, nxt,
+                                          jnp.full((2,), 16, jnp.int32))
+    from repro.models import transformer
+    full, _, _ = transformer.forward(params, toks, cfg, remat="none")
+    np.testing.assert_allclose(last_logits, full[:, 15], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dec_logits, full[:, 16], rtol=2e-4, atol=2e-4)
+
+
+def test_token_pipeline_deterministic_restart():
+    p1 = TokenPipeline(seed=5, batch=2, seq_len=8, vocab_size=100)
+    b1 = [p1.next() for _ in range(4)]
+    sd = p1.state_dict()
+    p2 = TokenPipeline(seed=5, batch=2, seq_len=8, vocab_size=100)
+    p2.load_state_dict({"seed": 5, "step": 2})
+    b2 = p2.next()
+    np.testing.assert_array_equal(b1[2]["tokens"], b2["tokens"])
+
+
+def test_dryrun_module_first_lines_set_xla_flags():
+    """The deliverable requires XLA_FLAGS set before ANY other import."""
+    src = open(os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                            "launch", "dryrun.py")).read()
+    lines = [l for l in src.splitlines() if l.strip()]
+    assert lines[0] == "import os"
+    assert "xla_force_host_platform_device_count=512" in lines[1]
+
+
+def test_production_mesh_shapes():
+    """make_production_mesh in a 512-device subprocess: 16x16 and 2x16x16."""
+    script = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.mesh import make_production_mesh, chips\n"
+        "m1 = make_production_mesh(); m2 = make_production_mesh(multi_pod=True)\n"
+        "print(dict(m1.shape), chips(m1), dict(m2.shape), chips(m2))\n"
+        "assert dict(m1.shape) == {'data': 16, 'model': 16}\n"
+        "assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_quickstart_example_runs():
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), "..",
+                                      "examples", "quickstart.py"), "--iters", "5"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SODDA" in out.stdout
