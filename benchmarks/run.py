@@ -162,14 +162,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
 import json, time
 import jax
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core import sodda
-from repro.core.distributed import make_distributed_step
+from repro.core import engine, sodda
 from repro.data.synthetic import make_svm_data
 cfg = SoddaConfig(P=4, Q=3, n=2000, m=300, L=32, lr0=0.05)
 X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
 out = {}
+mesh = engine.make_mesh_for(cfg)
 for gather in (True, False):
-    step = make_distributed_step(jax.make_mesh((4,3),("data","model")), cfg, gather_deltas=gather)
+    step = engine.make_step(cfg, "shard_map", mesh=mesh, gather_deltas=gather)
     s = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
     s = step(s, X, y)  # compile
     t0 = time.perf_counter()

@@ -15,19 +15,18 @@ import time
 import jax
 
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core import sodda
-from repro.core.distributed import distributed_objective, make_distributed_step
+from repro.core import engine, sodda
 from repro.data.synthetic import make_svm_data
 
 
 def main():
     cfg = SoddaConfig(P=4, Q=3, n=2000, m=300, L=32, lr0=0.05)
     print(f"devices: {len(jax.devices())}; grid P={cfg.P} x Q={cfg.Q}")
-    mesh = jax.make_mesh((cfg.P, cfg.Q), ("data", "model"))
+    mesh = engine.make_mesh_for(cfg)
 
     X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
-    step = make_distributed_step(mesh, cfg)
-    obj = distributed_objective(mesh, cfg)
+    step = engine.make_step(cfg, "shard_map", mesh=mesh)
+    obj = engine.make_objective(cfg, "shard_map", mesh=mesh)
 
     state = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
     t0 = time.time()

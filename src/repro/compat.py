@@ -1,0 +1,45 @@
+"""jax version compatibility layer.
+
+The repo targets the modern ``jax.shard_map`` API (jax >= 0.6: top-level
+export, ``check_vma=`` kwarg). The pinned container runs jax 0.4.37, where
+shard_map lives in ``jax.experimental.shard_map`` and the static
+replication-check kwarg is spelled ``check_rep=``. Every shard_map call site
+in the repo goes through :func:`shard_map` here so the version split is
+resolved exactly once.
+
+``check_vma`` semantics (and our mapping onto ``check_rep``):
+  * None  — library default (static replication checking on).
+  * False — disable the static check; required wherever an output is
+    replicated in a way the checker cannot infer (e.g. the all_gather +
+    scatter assembly in ``core.distributed``).
+  * True  — force the check on.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "HAS_TOPLEVEL_SHARD_MAP"]
+
+HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+if not HAS_TOPLEVEL_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``jax.shard_map``.
+
+    Accepts the modern keyword spelling (``check_vma``) and translates to
+    ``check_rep`` on old jax. Always keyword-only to keep call sites
+    unambiguous across the signature change.
+    """
+    kwargs = {}
+    if HAS_TOPLEVEL_SHARD_MAP:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, **kwargs)

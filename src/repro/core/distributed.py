@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 from repro.core.partition import _exact_count_mask
@@ -32,7 +33,8 @@ __all__ = ["make_distributed_step", "distributed_objective"]
 
 
 def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
-                          compress_mu: bool = False, compress_z: bool = False):
+                          compress_mu: bool = False, compress_z: bool = False,
+                          use_kernel: bool = False):
     """Build the jitted shard_map SODDA step for `mesh` (data=P, model=Q).
 
     gather_deltas=True uses an all_gather of the m_tilde-sized updated
@@ -45,6 +47,10 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
     C^t coordinate masking with 4x narrower wires. The inner loop tolerates
     a slightly perturbed mu (it is already a stochastic estimate; Theorem 1
     only needs bounded second moments).
+
+    use_kernel=True runs the fully-local inner loop through the Pallas
+    kernel wrapper (``repro.kernels.ops.sodda_inner`` with a per-device
+    batch of one block) — the 'shard_map+pallas' engine backend.
     """
     Pn, Qn = mesh.shape["data"], mesh.shape["model"]
     assert (Pn, Qn) == (cfg.P, cfg.Q), (mesh.shape, cfg)
@@ -101,7 +107,12 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
         yl = y_loc[J]
         w0 = jax.lax.dynamic_slice(w_loc, (k * mt,), (mt,))
         mu_blk = jax.lax.dynamic_slice(mu_q, (k * mt,), (mt,))
-        wL = inner_loop(cfg.loss, w0, Xl, yl, mu_blk, gamma)
+        if use_kernel:
+            from repro.kernels import ops as kops  # local import: optional dep
+            wL = kops.sodda_inner(w0[None], Xl[None], yl[None], mu_blk[None],
+                                  gamma, cfg.loss, force="pallas")[0]
+        else:
+            wL = inner_loop(cfg.loss, w0, Xl, yl, mu_blk, gamma)
 
         # --- step 19: assemble. Each (q, k) block was updated by exactly one
         # row; share the new blocks across the column.
@@ -117,7 +128,7 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
             w_new = w_loc + jax.lax.psum(delta, "data")
         return w_new
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         step_local,
         mesh=mesh,
         in_specs=(P("data", "model"), P("data"), P("model"), P(), P()),
@@ -145,7 +156,7 @@ def distributed_objective(mesh, cfg: SoddaConfig):
         # replicated scalar out
         return v
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         obj_local, mesh=mesh,
         in_specs=(P("data", "model"), P("data"), P("model")),
         out_specs=P(),

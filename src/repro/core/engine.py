@@ -1,0 +1,226 @@
+"""Backend-agnostic SODDA engine.
+
+The paper's claim is that one algorithm — the doubly-distributed SODDA
+outer iteration — is the same object whether it runs vectorized on one
+host, sharded over a (data=P, model=Q) device mesh, or with its inner loop
+lowered to a Pallas kernel. This module encodes that claim as an API: every
+implementation is a *backend* behind :func:`make_step`, and the conformance
+suite (``tests/test_conformance.py``) holds all backends to the reference
+trajectory under an explicit tolerance policy (``repro.testing.tolerances``).
+
+Backends
+--------
+``reference``          single-host vmap implementation (``core.sodda``)
+``pallas``             reference driver + Pallas inner kernel (``kernels``)
+``shard_map``          doubly-distributed step on a mesh (``core.distributed``)
+``shard_map+pallas``   distributed step with the Pallas inner kernel
+
+Options orthogonal to the backend (``EngineOptions``): delta exchange
+strategy (``gather_deltas``) and int8 wire compression of the two dominant
+collectives (``compress_z``, ``compress_mu``) — meaningful only for the
+distributed backends, and rejected with ``ValueError`` elsewhere so a silent
+no-op can never masquerade as a measured ablation.
+
+Every step function returned by :func:`make_step` has the uniform signature
+``step(state: SoddaState, X, y) -> SoddaState`` regardless of backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import losses, sodda
+from repro.core.sodda import SoddaState, init_state, iteration_flops  # noqa: F401 (re-export)
+
+__all__ = [
+    "BACKENDS",
+    "EngineOptions",
+    "available_backends",
+    "register_backend",
+    "make_step",
+    "make_objective",
+    "make_mesh_for",
+    "run",
+    "init_state",
+    "iteration_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Backend-orthogonal knobs for one SODDA step construction.
+
+    mesh          jax Mesh with ('data', 'model') axes; required by the
+                  distributed backends (auto-built from the local devices
+                  when omitted and enough devices exist).
+    gather_deltas True: all_gather of m_tilde sub-blocks (paper-faithful
+                  concatenate, half the wires); False: zero-padded m-sized
+                  delta psum.
+    compress_mu   int8 wires for the snapshot-gradient psum over 'data'.
+    compress_z    int8 wires for the partial-inner-product psum over 'model'.
+    """
+
+    mesh: Optional[object] = None
+    gather_deltas: bool = True
+    compress_mu: bool = False
+    compress_z: bool = False
+
+    @property
+    def distributed_kwargs(self):
+        return dict(gather_deltas=self.gather_deltas,
+                    compress_mu=self.compress_mu, compress_z=self.compress_z)
+
+    def require_no_wires(self, backend: str):
+        if self.compress_mu or self.compress_z:
+            raise ValueError(
+                f"backend {backend!r} has no collectives to compress; "
+                "compress_mu/compress_z require a distributed backend")
+        if not self.gather_deltas:
+            raise ValueError(
+                f"backend {backend!r} has no delta exchange; gather_deltas "
+                "only selects a strategy for distributed backends")
+        if self.mesh is not None:
+            raise ValueError(
+                f"backend {backend!r} runs on one host and takes no mesh; "
+                "pass mesh only to distributed backends")
+
+
+StepFn = Callable[..., SoddaState]
+BackendFactory = Callable[[SoddaConfig, EngineOptions], StepFn]
+
+_REGISTRY: Dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str):
+    """Register a backend factory ``f(cfg, opts) -> step``; returns f.
+
+    Future scaling work (multi-host, async, new exchange schemes) plugs in
+    here and is immediately covered by the conformance matrix.
+    """
+
+    def deco(factory: BackendFactory) -> BackendFactory:
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def available_backends():
+    return tuple(sorted(_REGISTRY))
+
+
+def make_mesh_for(cfg: SoddaConfig):
+    """A (data=P, model=Q) mesh over the local devices for `cfg`'s grid."""
+    need = cfg.P * cfg.Q
+    have = jax.local_device_count()
+    if have < need:
+        raise ValueError(
+            f"cfg grid {cfg.P}x{cfg.Q} needs {need} devices, have {have} "
+            "(force more with --xla_force_host_platform_device_count)")
+    return jax.make_mesh((cfg.P, cfg.Q), ("data", "model"))
+
+
+def _resolve_mesh(cfg: SoddaConfig, opts: EngineOptions):
+    return opts.mesh if opts.mesh is not None else make_mesh_for(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+@register_backend("reference")
+def _reference(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
+    opts.require_no_wires("reference")
+
+    def step(state, X, y):
+        return sodda.sodda_step(state, X, y, cfg, use_kernel=False)
+
+    return step
+
+
+@register_backend("pallas")
+def _pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
+    opts.require_no_wires("pallas")
+
+    def step(state, X, y):
+        return sodda.sodda_step(state, X, y, cfg, use_kernel=True)
+
+    return step
+
+
+@register_backend("shard_map")
+def _shard_map(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
+    from repro.core.distributed import make_distributed_step
+    return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
+                                 **opts.distributed_kwargs)
+
+
+@register_backend("shard_map+pallas")
+def _shard_map_pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
+    from repro.core.distributed import make_distributed_step
+    return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
+                                 use_kernel=True, **opts.distributed_kwargs)
+
+
+BACKENDS = ("reference", "pallas", "shard_map", "shard_map+pallas")
+
+
+# ---------------------------------------------------------------------------
+# Public constructors
+# ---------------------------------------------------------------------------
+def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
+              gather_deltas: bool = True, compress_mu: bool = False,
+              compress_z: bool = False) -> StepFn:
+    """Build a SODDA step ``(state, X, y) -> state`` for `backend`."""
+    try:
+        factory = _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {available_backends()}"
+        ) from None
+    opts = EngineOptions(mesh=mesh, gather_deltas=gather_deltas,
+                         compress_mu=compress_mu, compress_z=compress_z)
+    return factory(cfg, opts)
+
+
+def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None):
+    """Objective ``F(X, y, w)`` evaluated the way `backend` would see it.
+
+    Backends without a sharded objective (including externally registered
+    ones) get the exact single-host objective — same math, one device.
+    """
+    if backend not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {available_backends()}")
+    if backend in ("shard_map", "shard_map+pallas"):
+        from repro.core.distributed import distributed_objective
+        return distributed_objective(
+            _resolve_mesh(cfg, EngineOptions(mesh=mesh)), cfg)
+    if mesh is not None:
+        raise ValueError(
+            f"backend {backend!r} runs on one host and takes no mesh")
+    return jax.jit(functools.partial(losses.objective, cfg.loss))
+
+
+def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
+        *, record_every: int = 1, mesh=None, **options):
+    """Engine-level analogue of ``sodda.run`` for any backend.
+
+    Returns (final state, [(t, F(w^t)) history]); the objective is always
+    the exact single-host one so histories are comparable across backends.
+    """
+    step = make_step(cfg, backend, mesh=mesh, **options)
+    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
+    state = init_state(key, cfg.M)
+    hist = []
+    for it in range(iters):
+        if it % record_every == 0:
+            hist.append((it, float(obj(X, y, state.w))))
+        state = step(state, X, y)
+    hist.append((iters, float(obj(X, y, state.w))))
+    return state, hist

@@ -21,16 +21,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core.distributed import make_distributed_step
+from repro.core import engine
 from repro.core.sodda import SoddaState
 from repro.launch.roofline import LINK_BW, PEAK_FLOPS, collective_stats, total_link_bytes
 
 
 def analyze(cfg: SoddaConfig, gather: bool, compress: bool,
             compress_z: bool = False):
-    mesh = jax.make_mesh((cfg.P, cfg.Q), ("data", "model"))
-    step = make_distributed_step(mesh, cfg, gather_deltas=gather,
-                                 compress_mu=compress, compress_z=compress_z)
+    mesh = engine.make_mesh_for(cfg)
+    step = engine.make_step(cfg, "shard_map", mesh=mesh, gather_deltas=gather,
+                            compress_mu=compress, compress_z=compress_z)
     X = jax.ShapeDtypeStruct((cfg.N, cfg.M), jnp.float32)
     y = jax.ShapeDtypeStruct((cfg.N,), jnp.float32)
     state = SoddaState(
@@ -41,6 +41,8 @@ def analyze(cfg: SoddaConfig, gather: bool, compress: bool,
     with mesh:
         comp = jax.jit(step).lower(state, X, y).compile()
     cost = comp.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4: one dict per computation
+        cost = cost[0] if cost else {}
     stats = collective_stats(comp.as_text(), cfg.P * cfg.Q)
     return {
         "flops_per_device": cost.get("flops", 0.0),

@@ -25,8 +25,20 @@ def _axis_size(axis: str) -> int:
     return jax.lax.psum(1, axis)
 
 
-def compressed_psum(x, axis: str):
-    """int8-wire psum along a shard_map axis. Returns fp32, same shape."""
+def compressed_psum(x, axis):
+    """int8-wire psum along one or more shard_map axes. Returns fp32, same
+    shape.
+
+    ``axis`` is a single axis name or a tuple of names. A multi-axis sum is
+    realized as nested single-axis all-reduces (psum over a product axis
+    factorizes); each stage re-quantizes, so the worst-case error compounds
+    linearly in the number of axes — callers reducing over a whole (P, Q)
+    grid should prefer reducing over the one axis that carries the volume.
+    """
+    if isinstance(axis, (tuple, list)):
+        for a in axis:
+            x = compressed_psum(x, a)
+        return x
     n = _axis_size(axis)
     shape, size = x.shape, x.size
     flat = x.astype(jnp.float32).reshape(-1)
@@ -58,10 +70,15 @@ class ErrorFeedback(NamedTuple):
 
 def compressed_psum_ef(x, ef: ErrorFeedback, axis: str):
     """Error-feedback variant: local quantization residual carried across
-    steps; the time-average of the outputs is unbiased."""
+    steps; the time-average of the outputs is unbiased.
+
+    Single-axis only: the residual below models exactly one quantization
+    stage, which would understate the error of a nested multi-axis sum."""
+    if isinstance(axis, (tuple, list)):
+        raise TypeError("compressed_psum_ef supports a single axis; "
+                        "compose per-axis calls to keep the residual exact")
     xc = x.astype(jnp.float32) + ef.residual
     out = compressed_psum(xc, axis)
-    n = _axis_size(axis)
     # local residual: what this device's contribution lost to quantization
     absmax = jax.lax.pmax(jnp.max(jnp.abs(xc)), axis)
     s1 = jnp.maximum(absmax, 1e-20) / 127.0

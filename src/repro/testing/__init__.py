@@ -1,0 +1,41 @@
+"""Shared test infrastructure: device forcing, meshes, tolerances, fixtures.
+
+The distributed tests need a multi-device host. Historically every such
+test respawned a subprocess with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N`` and paid full jit warm-up each time; instead, the test
+session itself now runs on a forced 12-device host platform
+(:func:`force_host_devices` called from ``tests/conftest.py`` before jax
+initializes) and shard_map tests run in-process against
+:func:`sodda_test_mesh`. :func:`run_forced_subprocess` remains for the rare
+case that genuinely needs a *different* device count (the 512-device
+production-mesh check).
+"""
+from repro.testing.devices import (DEFAULT_TEST_DEVICES,
+                                   enable_compilation_cache,
+                                   force_host_devices, require_host_devices,
+                                   run_forced_subprocess, sodda_test_mesh)
+from repro.testing.fixtures import (CONFORMANCE_ITERS, make_problem,
+                                    medium_fixture_config,
+                                    small_fixture_config)
+from repro.testing.tolerances import (BITWISE, F32_REDUCTION, QUANTIZED,
+                                      TolerancePolicy, assert_objectives_close,
+                                      assert_trajectories_close)
+
+__all__ = [
+    "DEFAULT_TEST_DEVICES",
+    "enable_compilation_cache",
+    "force_host_devices",
+    "require_host_devices",
+    "run_forced_subprocess",
+    "sodda_test_mesh",
+    "CONFORMANCE_ITERS",
+    "make_problem",
+    "small_fixture_config",
+    "medium_fixture_config",
+    "BITWISE",
+    "F32_REDUCTION",
+    "QUANTIZED",
+    "TolerancePolicy",
+    "assert_objectives_close",
+    "assert_trajectories_close",
+]

@@ -1,0 +1,62 @@
+"""Canonical SODDA problem fixtures for equivalence tests.
+
+Two sizes:
+
+  * small  — a 2x2 grid, a few hundred scalars; every cell of the
+             conformance matrix pays its own jit compile, and the 2x2 grid
+             roughly halves that cost versus the 4x3 seed grid (the 4x3
+             parity itself is covered once in tests/test_distributed.py).
+  * medium — the 12-device 4x3 grid with enough signal for convergence-
+             preservation checks (the int8 compression cells assert the
+             objective still descends to the reference's neighbourhood,
+             which needs real progress to see).
+
+The learning rate is tuned per loss: the squared loss has an unbounded
+derivative, so it needs a smaller step than hinge/logistic on the same data
+to keep 5-iteration trajectories well inside f32 range.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.sodda_svm import SoddaConfig
+
+CONFORMANCE_ITERS = 5  # outer iterations every parity cell runs
+
+_LR0 = {"hinge": 0.05, "logistic": 0.05, "squared": 0.02}
+_CONST_LR = {"hinge": 0.02, "logistic": 0.02, "squared": 0.01}
+
+
+def small_fixture_config(loss: str = "hinge",
+                         lr_schedule: str = "diminishing") -> SoddaConfig:
+    """The conformance-matrix cell config (grid 2x2, 160 x 32 problem)."""
+    return _with_lr(
+        SoddaConfig(name=f"sodda-test-small-{loss}", loss=loss,
+                    P=2, Q=2, n=80, m=16, L=6),
+        loss, lr_schedule)
+
+
+def medium_fixture_config(loss: str = "hinge",
+                          lr_schedule: str = "diminishing") -> SoddaConfig:
+    """Convergence-bearing config (grid 4x3, 2000 x 360 problem)."""
+    return _with_lr(
+        SoddaConfig(name=f"sodda-test-medium-{loss}", loss=loss,
+                    P=4, Q=3, n=500, m=120, L=8),
+        loss, lr_schedule)
+
+
+def _with_lr(cfg: SoddaConfig, loss: str, lr_schedule: str) -> SoddaConfig:
+    if lr_schedule == "diminishing":
+        return dataclasses.replace(cfg, lr0=_LR0[loss], constant_lr=0.0)
+    if lr_schedule == "constant":
+        return dataclasses.replace(cfg, constant_lr=_CONST_LR[loss])
+    raise ValueError(f"unknown lr_schedule {lr_schedule!r}")
+
+
+def make_problem(cfg: SoddaConfig, seed: int = 0):
+    """(X, y) for `cfg` — the ±1-label synthetic SVM data of the seed tests
+    (valid for all three GLM losses; squared regresses onto the labels)."""
+    import jax
+    from repro.data.synthetic import make_svm_data
+    X, y, _ = make_svm_data(jax.random.PRNGKey(seed), cfg.N, cfg.M)
+    return X, y

@@ -1,0 +1,67 @@
+"""Tolerance policies: the machine-checkable equivalence contract.
+
+A backend is *conformant* when its iterate trajectory and objective values
+track the reference implementation within the policy matched to its
+numerics:
+
+  * BITWISE        — same trace, same arithmetic (reference vs itself,
+                     pure re-runs): exact equality.
+  * F32_REDUCTION  — same math, different reduction order / fusion
+                     (shard_map collectives, Pallas hoisted matvec): error
+                     bounded by a small multiple of f32 epsilon times the
+                     iterate scale, uniformly over the trajectory.
+  * QUANTIZED      — int8 wire compression: iterates may drift (each step
+                     perturbs an already-stochastic estimator), so the
+                     contract is objective-level: the final objective must
+                     stay within a few percent of the reference and the
+                     trend must remain a descent.
+
+Keeping the policies here (not inline in tests) makes loosening a tolerance
+a reviewed, documented act instead of a per-test drive-by.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+
+class TolerancePolicy(NamedTuple):
+    name: str
+    # trajectory contract: max_t |w_ref^t - w^t| <= w_rel * max(scale, 1)
+    # where scale = max_t |w_ref^t|;  None disables the trajectory check.
+    w_rel: Optional[float]
+    # objective contract: |F_ref - F| <= obj_rel * max(|F_ref|, obj_floor)
+    obj_rel: float
+    obj_floor: float = 0.1
+
+
+BITWISE = TolerancePolicy("bitwise", w_rel=0.0, obj_rel=0.0)
+F32_REDUCTION = TolerancePolicy("f32-reduction", w_rel=1e-4, obj_rel=1e-4)
+QUANTIZED = TolerancePolicy("int8-quantized", w_rel=None, obj_rel=0.05)
+
+
+def assert_trajectories_close(ref_ws: Sequence, got_ws: Sequence,
+                              policy: TolerancePolicy, context: str = ""):
+    """Check the iterate trajectory contract of `policy` (see module doc)."""
+    if policy.w_rel is None:
+        return
+    assert len(ref_ws) == len(got_ws), (len(ref_ws), len(got_ws))
+    ref = [np.asarray(w) for w in ref_ws]
+    got = [np.asarray(w) for w in got_ws]
+    scale = max(max(float(np.max(np.abs(w))) for w in ref), 1.0)
+    errs = [float(np.max(np.abs(r - g))) for r, g in zip(ref, got)]
+    if policy.w_rel == 0.0:
+        assert all(e == 0.0 for e in errs), (policy.name, context, errs)
+    else:
+        bound = policy.w_rel * scale
+        assert max(errs) <= bound, (
+            f"{policy.name} {context}: max traj err {max(errs):.3e} > "
+            f"{bound:.3e} (scale {scale:.3e}); per-iter errs {errs}")
+
+
+def assert_objectives_close(f_ref: float, f_got: float,
+                            policy: TolerancePolicy, context: str = ""):
+    bound = policy.obj_rel * max(abs(f_ref), policy.obj_floor)
+    assert abs(f_ref - f_got) <= bound, (
+        f"{policy.name} {context}: |{f_ref:.6f} - {f_got:.6f}| > {bound:.2e}")

@@ -1,0 +1,197 @@
+"""Cross-backend conformance harness (the machine-checkable equivalence
+contract between the paper's local and distributed SODDA formulations).
+
+Every cell of the parity matrix runs CONFORMANCE_ITERS outer iterations of
+one engine backend on the canonical small fixture and holds the resulting
+iterate trajectory / objective to the reference implementation under the
+tolerance policy matched to its numerics (see repro.testing.tolerances).
+All cells run in-process on the session's forced 12-device host platform —
+no subprocess respawns.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, losses
+from repro.testing import (BITWISE, CONFORMANCE_ITERS, F32_REDUCTION,
+                           QUANTIZED, assert_objectives_close,
+                           assert_trajectories_close, make_problem,
+                           small_fixture_config, sodda_test_mesh)
+
+LOSSES = tuple(losses.LOSSES)  # hinge, logistic, squared
+LRS = ("diminishing", "constant")
+_DISTRIBUTED = ("shard_map", "shard_map+pallas")
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg(loss, lr):
+    return small_fixture_config(loss, lr)
+
+
+def _cell(backend, loss, lr, policy, **opts):
+    tag = "".join(f"|{k}={v}" for k, v in sorted(opts.items()))
+    return pytest.param(backend, loss, lr, policy, opts,
+                        id=f"{backend}|{loss}|{lr}{tag}")
+
+
+# ---------------------------------------------------------------------------
+# The parity matrix: backend x loss x lr x compression/exchange flags.
+# ---------------------------------------------------------------------------
+CELLS = (
+    # exact-numerics backends over the full loss x lr grid
+    [_cell("pallas", l, lr, F32_REDUCTION) for l in LOSSES for lr in LRS]
+    + [_cell("shard_map", l, lr, F32_REDUCTION) for l in LOSSES for lr in LRS]
+    # Pallas inner kernel inside the shard_map step
+    + [_cell("shard_map+pallas", l, "diminishing", F32_REDUCTION)
+       for l in LOSSES]
+    # delta-psum exchange ablation (gather_deltas=False)
+    + [_cell("shard_map", l, "diminishing", F32_REDUCTION,
+             gather_deltas=False) for l in LOSSES]
+    # int8 wire compression: objective-level contract
+    + [_cell("shard_map", "hinge", lr, QUANTIZED, compress_mu=True)
+       for lr in LRS]
+    + [_cell("shard_map", "hinge", lr, QUANTIZED, compress_z=True)
+       for lr in LRS]
+    + [_cell("shard_map", l, "diminishing", QUANTIZED,
+             compress_mu=True, compress_z=True) for l in ("hinge", "logistic")]
+)
+
+assert len(CELLS) >= 24, len(CELLS)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem(small_fixture_config())
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return sodda_test_mesh(small_fixture_config())
+
+
+def _run_trajectory(step, cfg, X, y):
+    state = engine.init_state(jax.random.PRNGKey(1), cfg.M)
+    ws = [np.asarray(state.w)]
+    for _ in range(CONFORMANCE_ITERS):
+        state = step(state, X, y)
+        ws.append(np.asarray(state.w))
+    return ws
+
+
+@pytest.fixture(scope="module")
+def reference(problem):
+    """Lazily-computed reference trajectories, one per (loss, lr) pair."""
+    cache = {}
+
+    def get(loss, lr):
+        if (loss, lr) not in cache:
+            cfg = _cfg(loss, lr)
+            X, y = problem
+            ws = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
+            objs = [float(losses.objective(loss, X, y, jnp.asarray(w)))
+                    for w in (ws[0], ws[-1])]
+            cache[(loss, lr)] = (ws, objs[0], objs[1])
+        return cache[(loss, lr)]
+
+    return get
+
+
+@pytest.mark.parametrize("backend,loss,lr,policy,opts", CELLS)
+def test_backend_parity(backend, loss, lr, policy, opts, problem, reference,
+                        request):
+    cfg = _cfg(loss, lr)
+    X, y = problem
+    ref_ws, obj0, obj_ref = reference(loss, lr)
+
+    kwargs = dict(opts)
+    if backend in _DISTRIBUTED:
+        # resolved lazily so mesh-free cells (reference/pallas) still run on
+        # hosts that cannot provide the device grid
+        kwargs["mesh"] = request.getfixturevalue("mesh")
+    step = engine.make_step(cfg, backend, **kwargs)
+    ws = _run_trajectory(step, cfg, X, y)
+
+    ctx = f"{backend}/{loss}/{lr}/{opts}"
+    assert_trajectories_close(ref_ws, ws, policy, ctx)
+    obj = float(losses.objective(loss, X, y, jnp.asarray(ws[-1])))
+    assert_objectives_close(obj_ref, obj, policy, ctx)
+    # objective monotone-trend sanity: every backend must still descend
+    assert obj < obj0, (ctx, obj0, obj)
+    assert np.isfinite(ws[-1]).all(), ctx
+
+
+def test_reference_is_bitwise_deterministic(problem):
+    """The BITWISE policy anchor: two independent step constructions give
+    identical trajectories (pure function of state + sampled keys)."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    ws1 = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
+    ws2 = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
+    assert_trajectories_close(ws1, ws2, BITWISE, "reference-vs-reference")
+
+
+# ---------------------------------------------------------------------------
+# Engine API contract
+# ---------------------------------------------------------------------------
+def test_registry_exposes_builtin_backends():
+    assert set(engine.BACKENDS) <= set(engine.available_backends())
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.make_step(small_fixture_config(), "mpi")
+
+
+def test_compression_rejected_on_local_backends():
+    with pytest.raises(ValueError, match="no collectives"):
+        engine.make_step(small_fixture_config(), "reference",
+                         compress_mu=True)
+    with pytest.raises(ValueError, match="no delta exchange"):
+        engine.make_step(small_fixture_config(), "pallas",
+                         gather_deltas=False)
+
+
+def test_mesh_rejected_on_local_backends(mesh):
+    with pytest.raises(ValueError, match="takes no mesh"):
+        engine.make_step(small_fixture_config(), "reference", mesh=mesh)
+    with pytest.raises(ValueError, match="takes no mesh"):
+        engine.make_objective(small_fixture_config(), "pallas", mesh=mesh)
+
+
+def test_engine_run_records_history(problem, mesh):
+    """engine.run: history cadence, options forwarding, and backend parity
+    of the recorded objectives."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    key = jax.random.PRNGKey(1)
+    _, h_ref = engine.run(key, X, y, cfg, iters=4, backend="reference",
+                          record_every=2)
+    assert [t for t, _ in h_ref] == [0, 2, 4]
+    assert h_ref[-1][1] < h_ref[0][1]  # descended
+    _, h_sm = engine.run(key, X, y, cfg, iters=4, backend="shard_map",
+                         record_every=2, mesh=mesh, gather_deltas=False)
+    np.testing.assert_allclose([v for _, v in h_sm], [v for _, v in h_ref],
+                               rtol=1e-4)
+
+
+def test_distributed_objective_matches_reference(problem, mesh):
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    w = jax.random.normal(jax.random.PRNGKey(3), (cfg.M,)) * 0.1
+    f_dist = float(engine.make_objective(cfg, "shard_map", mesh=mesh)(X, y, w))
+    f_ref = float(engine.make_objective(cfg, "reference")(X, y, w))
+    np.testing.assert_allclose(f_dist, f_ref, rtol=1e-5)
+
+
+def test_iteration_flops_consistent_across_engine():
+    """The benchmark x-axis: engine re-export must be the core function and
+    the exact-snapshot variant must dominate the sampled one."""
+    from repro.core import sodda
+    cfg = small_fixture_config()
+    assert engine.iteration_flops is sodda.iteration_flops
+    sampled = engine.iteration_flops(cfg, exact_snapshot=False)
+    exact = engine.iteration_flops(cfg, exact_snapshot=True)
+    assert 0 < sampled < exact

@@ -144,6 +144,71 @@ def test_elastic_rescale_continues_converging(data):
     assert f_after < f_before, (f_before, f_after)
 
 
+def test_exact_count_mask_cardinality_and_nesting():
+    """Hypothesis-free fallback for the partition invariants: the mask keeps
+    exactly `count` coordinates, and nested thresholds give C ⊆ B."""
+    from repro.core.partition import _exact_count_mask
+    for seed, count, n in [(0, 1, 2), (1, 7, 64), (2, 63, 64), (3, 64, 64),
+                           (4, 13, 200)]:
+        u = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+        m = _exact_count_mask(u, count)
+        assert int(m.sum()) == count, (seed, count, n)
+        assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+        # nesting: a smaller count on the same u selects a subset
+        for smaller in {1, count // 2} - {0}:
+            mc = _exact_count_mask(u, smaller)
+            assert bool(jnp.all(mc <= m)), (seed, count, smaller)
+
+
+def test_inner_loop_zero_iterations_is_identity():
+    """L=0: the scan body never runs, so inner_loop must return w0."""
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (16,))
+    Xl = jnp.zeros((0, 16))
+    yl = jnp.zeros((0,))
+    mu = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+    for loss in losses.LOSSES:
+        out = sodda.inner_loop(loss, w0, Xl, yl, mu, 0.05)
+        np.testing.assert_array_equal(out, w0)
+
+
+def test_inner_loop_zero_gamma_is_identity():
+    """gamma=0: every update is a no-op regardless of the data."""
+    key = jax.random.PRNGKey(1)
+    w0 = jax.random.normal(key, (16,))
+    Xl = jax.random.normal(jax.random.fold_in(key, 1), (5, 16))
+    yl = jnp.sign(jax.random.normal(jax.random.fold_in(key, 2), (5,)))
+    mu = jax.random.normal(jax.random.fold_in(key, 3), (16,))
+    for loss in losses.LOSSES:
+        out = sodda.inner_loop(loss, w0, Xl, yl, mu, 0.0)
+        np.testing.assert_array_equal(out, w0)
+
+
+def test_counts_edge_cases():
+    """c is clamped to <= b, and every count bottoms out at 1 for tiny
+    fractions (the samples can never be empty)."""
+    cfg = dataclasses.replace(CFG, b_frac=0.5, c_frac=0.9)
+    b, c, d = sodda._counts(cfg)
+    assert c <= b  # C^t subset of B^t even when c_frac > b_frac
+    tiny = dataclasses.replace(CFG, b_frac=1e-9, c_frac=1e-9, d_frac=1e-9)
+    b, c, d = sodda._counts(tiny)
+    assert (b, c, d) == (1, 1, 1)
+    full = dataclasses.replace(CFG, b_frac=1.0, c_frac=1.0, d_frac=1.0)
+    b, c, d = sodda._counts(full)
+    assert (b, c, d) == (CFG.M, CFG.M, CFG.n)
+
+
+def test_iteration_flops_snapshot_ordering():
+    """The benchmark x-axis: exact snapshot (b=c=d=1) must cost strictly
+    more than the sampled snapshot whenever any fraction < 1."""
+    sampled = sodda.iteration_flops(CFG, exact_snapshot=False)
+    exact = sodda.iteration_flops(CFG, exact_snapshot=True)
+    assert 0.0 < sampled < exact
+    full = dataclasses.replace(CFG, b_frac=1.0, c_frac=1.0, d_frac=1.0)
+    np.testing.assert_allclose(sodda.iteration_flops(full, False),
+                               sodda.iteration_flops(full, True))
+
+
 def test_kernel_path_matches_reference(data):
     """use_kernel=True (Pallas sodda_inner, interpret mode) is numerically
     the reference implementation."""

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Collectable without hypothesis installed (the whole module skips);
+hypothesis-free fallbacks for the core invariants live in
+tests/test_core_sodda.py.
+"""
 import dataclasses
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
