@@ -1,14 +1,18 @@
 """Benchmark harness — one function per paper table/figure + kernel/system
 benches. Prints ``name,us_per_call,derived`` CSV rows (derived column carries
-the table-specific metric).
+the table-specific metric). The ``driver`` bench additionally writes the
+machine-readable ``results/BENCH_sodda.json`` (schema in
+``benchmarks/validate_bench.py``).
 
     PYTHONPATH=src python -m benchmarks.run             # everything
-    PYTHONPATH=src python -m benchmarks.run --only paper_convergence
+    PYTHONPATH=src python -m benchmarks.run --only driver
 """
 from __future__ import annotations
 
 import argparse
+import os
 import dataclasses
+import json
 import time
 
 import jax
@@ -17,11 +21,16 @@ import numpy as np
 
 
 def _t(fn, *args, reps=3):
-    fn(*args)  # compile + warmup
+    """Mean wall time per call in us, async-dispatch safe.
+
+    Every rep is individually ``block_until_ready``'d — timing only the last
+    rep's sync lets earlier calls overlap the clock and under-reports
+    us/call (regression-tested in tests/test_benchmarks.py).
+    """
+    jax.block_until_ready(fn(*args))  # compile + warmup, fully drained
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
@@ -192,6 +201,86 @@ print(json.dumps(out))
 
 
 # ---------------------------------------------------------------------------
+# Scan-compiled driver vs the per-iteration Python loop, per backend, on the
+# conformance problem — the dispatch-overhead pitfall the paper's Spark
+# predecessors hit, measured. Emits the machine-readable BENCH_sodda.json
+# (us/iter + loss-vs-flops trajectory per backend, schema bench_sodda/v1).
+# ---------------------------------------------------------------------------
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_sodda.json")
+
+
+def bench_driver(iters: int = 60, reps: int = 3, out_path: str = None):
+    from repro.core import driver, engine, radisa, sodda
+    from repro.core.sodda import init_state
+    from repro.testing import make_problem, small_fixture_config
+
+    cfg = small_fixture_config()
+    X, y = make_problem(cfg)
+    key = jax.random.PRNGKey(1)
+
+    # the distributed backends join only when the host has the device grid
+    # (run under XLA_FLAGS=--xla_force_host_platform_device_count=12, as the
+    # CI bench-smoke job does, to bench all five backends)
+    backends = ["reference", "pallas", "radisa-avg"]
+    mesh = None
+    if jax.local_device_count() >= cfg.P * cfg.Q:
+        mesh = engine.make_mesh_for(cfg)
+        backends += ["shard_map", "shard_map+pallas"]
+
+    flops_per_iter = {b: (radisa.radisa_avg_iteration_flops(cfg)
+                          if b == "radisa-avg" else sodda.iteration_flops(cfg))
+                      for b in backends}
+    payload = {"schema": "bench_sodda/v1",
+               "problem": {"name": cfg.name, "P": cfg.P, "Q": cfg.Q,
+                           "N": cfg.N, "M": cfg.M, "L": cfg.L,
+                           "loss": cfg.loss},
+               "iters": iters, "reps": reps, "backends": {}}
+
+    for backend in backends:
+        kw = {"mesh": mesh} if backend.startswith("shard_map") else {}
+
+        compiled = driver.make_run(cfg, iters, backend, record_every=1, **kw)
+        fresh = lambda: init_state(jnp.array(key, copy=True), cfg.M)
+        # _t warms once then times reps; run_python_loop's step/objective
+        # executables are lru-cached in the driver, so its warmup pass
+        # compiles everything the timed passes reuse
+        scan_us = _t(lambda: compiled(fresh(), X, y), reps=reps) / iters
+        loop_us = _t(lambda: driver.run_python_loop(key, X, y, cfg, iters,
+                                                    backend, **kw),
+                     reps=reps) / iters
+
+        _, loop_hist = driver.run_python_loop(key, X, y, cfg, iters, backend,
+                                              **kw)
+        _, scan_hist = driver.run(key, X, y, cfg, iters, backend, **kw)
+        fpi = flops_per_iter[backend]
+        payload["backends"][backend] = {
+            "flops_per_iter": fpi,
+            "python_loop": {"us_per_iter": loop_us,
+                            "trajectory": _traj(loop_hist, fpi)},
+            "scan_driver": {"us_per_iter": scan_us,
+                            "trajectory": _traj(scan_hist, fpi)},
+            "speedup": loop_us / scan_us,
+        }
+        row(f"driver_{backend}_scan", scan_us,
+            f"loop_us={loop_us:.1f} speedup={loop_us/scan_us:.2f}x "
+            f"final_loss={scan_hist[-1][1]:.4f}")
+
+    out_path = out_path or BENCH_JSON
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    row("driver_bench_json", 0.0, os.path.relpath(out_path))
+    return payload
+
+
+def _traj(hist, flops_per_iter):
+    return {"t": [t for t, _ in hist],
+            "flops": [t * flops_per_iter for t, _ in hist],
+            "loss": [v for _, v in hist]}
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary from the dry-run results (reads results/dryrun.json)
 # ---------------------------------------------------------------------------
 def bench_roofline_summary():
@@ -216,11 +305,10 @@ BENCHES = {
     "paper_knob_sweep": bench_paper_knob_sweep,
     "seed_variance": bench_seed_variance,
     "kernels": bench_kernels,
+    "driver": bench_driver,
     "distributed_sodda": bench_distributed_sodda,
     "roofline_summary": bench_roofline_summary,
 }
-
-import os  # noqa: E402  (used by bench_distributed_sodda)
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,103 @@
+"""Schema validation for the machine-readable driver benchmark output.
+
+``benchmarks/run.py --only driver`` writes ``results/BENCH_sodda.json``
+(schema ``bench_sodda/v1``); the CI bench-smoke job validates the file with
+this module before uploading it as an artifact, so downstream tooling can
+rely on the shape without re-deriving it from the writer.
+
+    PYTHONPATH=src python -m benchmarks.validate_bench results/BENCH_sodda.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = "bench_sodda/v1"
+
+_PROBLEM_KEYS = {"name": str, "P": int, "Q": int, "N": int, "M": int,
+                 "L": int, "loss": str}
+_TRAJ_KEYS = ("t", "flops", "loss")
+
+
+class BenchSchemaError(ValueError):
+    pass
+
+
+def _fail(msg: str):
+    raise BenchSchemaError(msg)
+
+
+def _check_trajectory(traj, ctx: str, iters: int):
+    if not isinstance(traj, dict):
+        _fail(f"{ctx}: trajectory must be an object")
+    for k in _TRAJ_KEYS:
+        v = traj.get(k)
+        if not isinstance(v, list) or not v:
+            _fail(f"{ctx}: trajectory.{k} must be a non-empty list")
+        if not all(isinstance(x, (int, float)) for x in v):
+            _fail(f"{ctx}: trajectory.{k} must be numeric")
+    n = {k: len(traj[k]) for k in _TRAJ_KEYS}
+    if len(set(n.values())) != 1:
+        _fail(f"{ctx}: trajectory arrays differ in length: {n}")
+    if traj["t"] != sorted(traj["t"]) or traj["t"][0] != 0 \
+            or traj["t"][-1] != iters:
+        _fail(f"{ctx}: trajectory.t must ascend from 0 to iters={iters}, "
+              f"got {traj['t'][:3]}...{traj['t'][-1:]}")
+
+
+def validate(payload: dict) -> dict:
+    """Validate a bench_sodda/v1 payload; returns it, raises on violation."""
+    if not isinstance(payload, dict):
+        _fail("payload must be a JSON object")
+    if payload.get("schema") != SCHEMA:
+        _fail(f"schema must be {SCHEMA!r}, got {payload.get('schema')!r}")
+    problem = payload.get("problem")
+    if not isinstance(problem, dict):
+        _fail("missing 'problem' object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"problem.{k} must be {ty.__name__}, got {problem.get(k)!r}")
+    iters = payload.get("iters")
+    if not isinstance(iters, int) or iters < 1:
+        _fail(f"iters must be a positive int, got {iters!r}")
+    backends = payload.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        _fail("backends must be a non-empty object")
+    for name, b in backends.items():
+        ctx = f"backends[{name!r}]"
+        if not isinstance(b, dict):
+            _fail(f"{ctx}: must be an object")
+        fpi = b.get("flops_per_iter")
+        if not isinstance(fpi, (int, float)) or fpi <= 0:
+            _fail(f"{ctx}: flops_per_iter must be positive, got {fpi!r}")
+        for variant in ("python_loop", "scan_driver"):
+            v = b.get(variant)
+            if not isinstance(v, dict):
+                _fail(f"{ctx}.{variant}: must be an object")
+            us = v.get("us_per_iter")
+            if not isinstance(us, (int, float)) or us <= 0:
+                _fail(f"{ctx}.{variant}.us_per_iter must be positive, "
+                      f"got {us!r}")
+            _check_trajectory(v.get("trajectory"), f"{ctx}.{variant}", iters)
+        sp = b.get("speedup")
+        if not isinstance(sp, (int, float)) or sp <= 0:
+            _fail(f"{ctx}.speedup must be positive, got {sp!r}")
+    return payload
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        payload = validate(json.load(f))
+    n = len(payload["backends"])
+    ref = payload["backends"].get("reference", {})
+    print(f"OK {argv[0]}: schema={payload['schema']} backends={n} "
+          f"reference_speedup={ref.get('speedup', float('nan')):.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

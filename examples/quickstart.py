@@ -1,5 +1,9 @@
 """Quickstart: SODDA on the paper's synthetic SVM problem (single host).
 
+The whole run goes through the scan-compiled driver (``repro.core.driver``):
+every outer iteration is fused into one device program, so the wall time you
+see is the algorithm, not Python dispatch overhead.
+
     PYTHONPATH=src python examples/quickstart.py --iters 30
 """
 import argparse
@@ -9,7 +13,7 @@ import time
 import jax
 
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core import radisa, sodda
+from repro.core import driver, radisa, sodda
 from repro.data.synthetic import make_svm_data
 
 
@@ -29,18 +33,19 @@ def main(argv=None):
           f"(b,c,d)=({cfg.b_frac},{cfg.c_frac},{cfg.d_frac})")
     X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
 
+    record = max(1, args.iters // 6)
     t0 = time.time()
-    _, hist = sodda.run(jax.random.PRNGKey(1), X, y, cfg, args.iters,
-                        record_every=max(1, args.iters // 6))
+    _, hist = driver.run(jax.random.PRNGKey(1), X, y, cfg, args.iters,
+                         "reference", record_every=record)
     print("SODDA      loss trajectory:",
           " ".join(f"{t}:{v:.4f}" for t, v in hist), f"({time.time()-t0:.1f}s)")
 
     t0 = time.time()
-    _, hist_r = radisa.run_radisa_avg(jax.random.PRNGKey(1), X, y, cfg,
-                                      args.iters,
-                                      record_every=max(1, args.iters // 6))
+    _, hist_r = driver.run(jax.random.PRNGKey(1), X, y, cfg, args.iters,
+                           "radisa-avg", record_every=record)
     print("RADiSA-avg loss trajectory:",
-          " ".join(f"{t}:{v:.4f}" for t, v in hist_r), f"({time.time()-t0:.1f}s)")
+          " ".join(f"{t}:{v:.4f}" for t, v in hist_r),
+          f"({time.time()-t0:.1f}s)")
 
     fs = sodda.iteration_flops(cfg)
     fr = radisa.radisa_avg_iteration_flops(cfg)

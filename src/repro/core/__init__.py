@@ -1,4 +1,5 @@
-"""The paper's contribution: SODDA + baselines + distributed implementation."""
+"""The paper's contribution: SODDA + baselines + distributed implementation
++ the scan-compiled run driver (``repro.core.driver``)."""
 from repro.core import losses, partition
 from repro.core.sodda import SoddaState, init_state, run, sodda_step
 from repro.core.radisa import radisa_avg_step, radisa_step, run_radisa_avg

@@ -1,0 +1,169 @@
+"""Scan-compiled run subsystem: the one outer-loop driver for every backend.
+
+The paper's headline claim is *per-cost* early-iteration superiority, but a
+per-iteration Python loop measures dispatch overhead, not the algorithm:
+every outer iteration pays a fresh jit dispatch and a host sync for the
+objective (the pitfall Dünner et al. document for the original Spark
+experiments). This module fuses the whole run on device:
+
+  * all ``iters`` outer iterations of any registered engine backend compile
+    into a single :func:`jax.lax.scan`, chunked by ``record_every``;
+  * the objective is recorded **on device** into the scan's preallocated
+    history buffer (the stacked ys) — never synced to host mid-run;
+  * the state buffers are donated to the compiled run, so the iterate is
+    updated in place across the whole trajectory;
+  * the host sees exactly one dispatch and one device->host transfer, at
+    the very end.
+
+:func:`run` keeps the exact ``(final_state, [(t, F(w^t))])`` contract of the
+legacy drivers (``engine.run`` / ``sodda.run`` / ``radisa.run_radisa_avg``
+are now thin wrappers over it). :func:`run_python_loop` preserves the old
+per-iteration dispatch loop as the benchmark baseline and the parity oracle
+for ``tests/test_conformance.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import losses
+
+__all__ = ["record_ticks", "make_run", "run", "run_python_loop"]
+
+
+def record_ticks(iters: int, record_every: int) -> Tuple[int, ...]:
+    """The iteration indices a run records the objective at.
+
+    Matches the legacy loop: every multiple of ``record_every`` strictly
+    below ``iters``, plus the final iterate — e.g. (0, 2, 4, 5) for
+    ``iters=5, record_every=2``.
+    """
+    if iters < 0:
+        raise ValueError(f"iters must be >= 0, got {iters}")
+    if record_every < 1:
+        raise ValueError(f"record_every must be >= 1, got {record_every}")
+    return tuple(range(0, iters, record_every)) + (iters,)
+
+
+def _chunk_lengths(iters: int, record_every: int) -> Tuple[int, ...]:
+    """Per-chunk step counts: full ``record_every`` chunks + the remainder."""
+    n_full, rem = divmod(iters, record_every)
+    return (record_every,) * n_full + ((rem,) if rem else ())
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_run(cfg: SoddaConfig, iters: int, backend: str, record_every: int,
+                record_objective: bool, mesh,
+                options: Tuple[Tuple[str, object], ...]):
+    """Build + cache the compiled scan driver for one run shape.
+
+    Keyed on everything that changes the computation (config, backend,
+    iteration/record structure, mesh, engine options) so repeated runs —
+    the conformance matrix, the goldens, the benchmark reps — reuse one
+    executable instead of re-tracing per call.
+    """
+    from repro.core import engine  # local: engine imports core.sodda
+
+    step = engine.make_step(cfg, backend, mesh=mesh, **dict(options))
+    obj = functools.partial(losses.objective, cfg.loss)
+    lens = jnp.asarray(_chunk_lengths(iters, record_every), jnp.int32)
+
+    def _run(state, X, y):
+        def chunk(s, length):
+            f = obj(X, y, s.w) if record_objective else None  # on device
+            s = jax.lax.fori_loop(0, length, lambda _, t: step(t, X, y), s)
+            return s, f
+
+        state, fs = jax.lax.scan(chunk, state, lens)
+        if not record_objective:
+            return state, jnp.zeros((0,), jnp.float32)
+        return state, jnp.concatenate([fs, obj(X, y, state.w)[None]])
+
+    # donate the state buffers: the iterate is rewritten in place over the
+    # whole trajectory rather than round-tripping per iteration
+    return jax.jit(_run, donate_argnums=(0,))
+
+
+def make_run(cfg: SoddaConfig, iters: int, backend: str = "reference", *,
+             record_every: int = 1, record_objective: bool = True,
+             mesh=None, **options):
+    """Compiled run ``(state, X, y) -> (final_state, history_buffer)``.
+
+    ``history_buffer`` is the on-device ``(len(record_ticks),)`` f32 array of
+    objective values at :func:`record_ticks` — nothing is synced to host.
+    The state argument is donated; do not reuse it after the call.
+
+    ``record_objective=False`` compiles the pure iteration program — no
+    objective evaluations at all, empty history buffer. Used by perf
+    analysis (the objective's collectives would otherwise drown the step's
+    own communication profile) and by production runs that monitor
+    elsewhere.
+    """
+    record_ticks(iters, record_every)  # validate arguments eagerly
+    return _cached_run(cfg, iters, backend, record_every, record_objective,
+                       mesh, tuple(sorted(options.items())))
+
+
+def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
+        *, record_every: int = 1, mesh=None, **options):
+    """Run `iters` outer iterations of `backend` as one fused device program.
+
+    Returns ``(final_state, [(t, F(w^t)) history])`` — the exact contract of
+    the legacy per-iteration drivers, produced with a single dispatch and a
+    single end-of-run host sync. The objective is always the exact
+    single-host one so histories are comparable across backends.
+    """
+    from repro.core.sodda import init_state
+
+    compiled = make_run(cfg, iters, backend, record_every=record_every,
+                        mesh=mesh, **options)
+    # copy the key: the state is donated, and donating an alias of the
+    # caller's key buffer would delete it out from under them
+    state, fs = compiled(init_state(jnp.array(key, copy=True), cfg.M), X, y)
+    hist = [(t, float(f))
+            for t, f in zip(record_ticks(iters, record_every), np.asarray(fs))]
+    return state, hist
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_loop_step(cfg: SoddaConfig, backend: str, mesh,
+                      options: Tuple[Tuple[str, object], ...]):
+    from repro.core import engine
+    return engine.make_step(cfg, backend, mesh=mesh, **dict(options))
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_objective(loss: str):
+    return jax.jit(functools.partial(losses.objective, loss))
+
+
+def run_python_loop(key, X, y, cfg: SoddaConfig, iters: int,
+                    backend: str = "reference", *, record_every: int = 1,
+                    mesh=None, **options):
+    """The legacy per-iteration dispatch loop (one jit call + one host sync
+    per recorded objective). Kept as the benchmark baseline the scan driver
+    is measured against and as the parity oracle for the conformance suite.
+
+    The step and objective executables are cached across calls (a fresh
+    ``jax.jit`` wrapper per call would be a jit-cache miss), so a short
+    warmup invocation genuinely warms a subsequent timed one and the
+    measured loop overhead is dispatch + host sync, not compilation.
+    """
+    from repro.core.sodda import init_state
+
+    record_ticks(iters, record_every)  # same argument validation as run()
+    step = _cached_loop_step(cfg, backend, mesh, tuple(sorted(options.items())))
+    obj = _cached_objective(cfg.loss)
+    state = init_state(key, cfg.M)
+    hist = []
+    for it in range(iters):
+        if it % record_every == 0:
+            hist.append((it, float(obj(X, y, state.w))))
+        state = step(state, X, y)
+    hist.append((iters, float(obj(X, y, state.w))))
+    return state, hist

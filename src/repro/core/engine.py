@@ -38,6 +38,7 @@ from repro.core.sodda import SoddaState, init_state, iteration_flops  # noqa: F4
 
 __all__ = [
     "BACKENDS",
+    "BASELINE_BACKENDS",
     "EngineOptions",
     "available_backends",
     "register_backend",
@@ -167,7 +168,21 @@ def _shard_map_pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
                                  use_kernel=True, **opts.distributed_kwargs)
 
 
+@register_backend("radisa-avg")
+def _radisa_avg(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
+    """RADiSA-avg baseline (Nathan & Klabjan) behind the same registry, so
+    every driver/benchmark runs baselines and SODDA through one code path."""
+    opts.require_no_wires("radisa-avg")
+    from repro.core import radisa
+
+    def step(state, X, y):
+        return radisa.radisa_avg_step(state, X, y, cfg)
+
+    return step
+
+
 BACKENDS = ("reference", "pallas", "shard_map", "shard_map+pallas")
+BASELINE_BACKENDS = ("radisa-avg",)
 
 
 # ---------------------------------------------------------------------------
@@ -209,18 +224,14 @@ def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None):
 
 def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
         *, record_every: int = 1, mesh=None, **options):
-    """Engine-level analogue of ``sodda.run`` for any backend.
+    """Engine-level run for any backend — now the scan-compiled driver.
 
     Returns (final state, [(t, F(w^t)) history]); the objective is always
     the exact single-host one so histories are comparable across backends.
+    All ``iters`` iterations fuse into one device program (see
+    ``repro.core.driver``); the legacy per-iteration loop survives as
+    ``driver.run_python_loop`` for benchmarking and parity testing.
     """
-    step = make_step(cfg, backend, mesh=mesh, **options)
-    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
-    state = init_state(key, cfg.M)
-    hist = []
-    for it in range(iters):
-        if it % record_every == 0:
-            hist.append((it, float(obj(X, y, state.w))))
-        state = step(state, X, y)
-    hist.append((iters, float(obj(X, y, state.w))))
-    return state, hist
+    from repro.core import driver
+    return driver.run(key, X, y, cfg, iters, backend,
+                      record_every=record_every, mesh=mesh, **options)

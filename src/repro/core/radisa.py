@@ -61,15 +61,10 @@ def radisa_avg_step(state: SoddaState, X, y, cfg: SoddaConfig):
 
 
 def run_radisa_avg(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1):
-    state = init_state(key, cfg.M)
-    hist = []
-    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
-    for it in range(iters):
-        if it % record_every == 0:
-            hist.append((it, float(obj(X, y, state.w))))
-        state = radisa_avg_step(state, X, y, cfg)
-    hist.append((iters, float(obj(X, y, state.w))))
-    return state, hist
+    """Scan-compiled RADiSA-avg run via the ``radisa-avg`` engine backend."""
+    from repro.core import driver  # local import: driver builds on engine
+    return driver.run(key, X, y, cfg, iters, "radisa-avg",
+                      record_every=record_every)
 
 
 def radisa_avg_iteration_flops(cfg: SoddaConfig) -> float:

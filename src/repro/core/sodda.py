@@ -120,16 +120,15 @@ def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = Fal
 
 def run(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1,
         use_kernel: bool = False):
-    """Run SODDA, returning (final state, [(t, F(w^t)) history])."""
-    state = init_state(key, cfg.M)
-    hist = []
-    obj = jax.jit(functools.partial(losses.objective, cfg.loss))
-    for it in range(iters):
-        if it % record_every == 0:
-            hist.append((it, float(obj(X, y, state.w))))
-        state = sodda_step(state, X, y, cfg, use_kernel)
-    hist.append((iters, float(obj(X, y, state.w))))
-    return state, hist
+    """Run SODDA, returning (final state, [(t, F(w^t)) history]).
+
+    Thin wrapper over the scan-compiled driver (``repro.core.driver``): the
+    whole trajectory is one fused device program, not a per-iteration loop.
+    """
+    from repro.core import driver  # local import: driver builds on engine
+    return driver.run(key, X, y, cfg, iters,
+                      "pallas" if use_kernel else "reference",
+                      record_every=record_every)
 
 
 # ---------------------------------------------------------------------------

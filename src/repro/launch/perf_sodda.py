@@ -3,11 +3,13 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=256"
                            " --xla_allow_excess_precision=false")
 
 """§Perf driver for the paper-representative cell: the doubly-distributed
-SODDA step on the production 16x16 mesh (P=16 observation x Q=16 feature
-partitions), lowered with abstract full-size inputs (dry-run style).
+SODDA outer loop on the production 16x16 mesh (P=16 observation x Q=16
+feature partitions), lowered with abstract full-size inputs (dry-run style).
 
-Reports per-outer-iteration collective bytes / flops per device for each
-variant of the update exchange:
+Lowers the *scan-compiled run driver* (``repro.core.driver.make_run``) —
+PERF_ITERS fused outer iterations, the program production actually executes
+— and reports per-outer-iteration collective bytes / flops per device for
+each variant of the update exchange:
   * psum      — zero-padded m-sized delta psum over 'data' (naive)
   * gather    — all_gather of the m_tilde-sized sub-blocks (paper-faithful
                 "concatenate", half the wires)
@@ -15,22 +17,28 @@ variant of the update exchange:
 
     PYTHONPATH=src python -m repro.launch.perf_sodda
 """
-import json
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core import engine
+from repro.core import driver
 from repro.core.sodda import SoddaState
 from repro.launch.roofline import LINK_BW, PEAK_FLOPS, collective_stats, total_link_bytes
+
+PERF_ITERS = 4  # fused outer iterations in the lowered scan program
 
 
 def analyze(cfg: SoddaConfig, gather: bool, compress: bool,
             compress_z: bool = False):
+    from repro.core import engine
     mesh = engine.make_mesh_for(cfg)
-    step = engine.make_step(cfg, "shard_map", mesh=mesh, gather_deltas=gather,
-                            compress_mu=compress, compress_z=compress_z)
+    # record_objective=False: lower the pure iteration program — the exact
+    # monitoring objective's own collectives are variant-independent and
+    # would drown the exchange comparison this table exists for
+    run = driver.make_run(cfg, PERF_ITERS, "shard_map",
+                          record_every=PERF_ITERS, record_objective=False,
+                          mesh=mesh, gather_deltas=gather,
+                          compress_mu=compress, compress_z=compress_z)
     X = jax.ShapeDtypeStruct((cfg.N, cfg.M), jnp.float32)
     y = jax.ShapeDtypeStruct((cfg.N,), jnp.float32)
     state = SoddaState(
@@ -39,11 +47,13 @@ def analyze(cfg: SoddaConfig, gather: bool, compress: bool,
         key=jax.ShapeDtypeStruct((2,), jnp.uint32),
     )
     with mesh:
-        comp = jax.jit(step).lower(state, X, y).compile()
+        comp = run.lower(state, X, y).compile()
     cost = comp.cost_analysis()
     if isinstance(cost, (list, tuple)):  # jax<=0.4: one dict per computation
         cost = cost[0] if cost else {}
     stats = collective_stats(comp.as_text(), cfg.P * cfg.Q)
+    # XLA's cost analysis and the HLO text both count the scan body ONCE
+    # regardless of trip count, so these are already per-outer-iteration.
     return {
         "flops_per_device": cost.get("flops", 0.0),
         "link_bytes_per_device": total_link_bytes(stats),

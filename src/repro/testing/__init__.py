@@ -17,6 +17,8 @@ from repro.testing.devices import (DEFAULT_TEST_DEVICES,
 from repro.testing.fixtures import (CONFORMANCE_ITERS, make_problem,
                                     medium_fixture_config,
                                     small_fixture_config)
+from repro.testing.invariants import (assert_samples_equal,
+                                      check_iteration_sample)
 from repro.testing.tolerances import (BITWISE, F32_REDUCTION, QUANTIZED,
                                       TolerancePolicy, assert_objectives_close,
                                       assert_trajectories_close)
@@ -29,6 +31,8 @@ __all__ = [
     "run_forced_subprocess",
     "sodda_test_mesh",
     "CONFORMANCE_ITERS",
+    "assert_samples_equal",
+    "check_iteration_sample",
     "make_problem",
     "small_fixture_config",
     "medium_fixture_config",

@@ -1,0 +1,63 @@
+"""Machine-checkable invariants of the paper's sampling machinery.
+
+One checker shared by the hypothesis property tests (``tests/test_property
+.py``) and their hypothesis-free fallbacks (``tests/test_core_sodda.py``),
+so both enforce exactly the same contract on
+:func:`repro.core.partition.sample_iteration`:
+
+  * B^t / C^t have the exact requested cardinalities and C^t ⊆ B^t
+    (paper steps 5-6);
+  * D^t is stratified: exactly ``d_count_local`` observations per
+    observation partition (step 7, the communication-free draw);
+  * every pi_q is a permutation of {0..P-1} (step 10 — conflict-free
+    sub-block assignment);
+  * the inner-loop row draws J are local row indices in [0, n);
+  * everything is a pure function of ``(key, t)`` (fold_in determinism —
+    what makes the reference and shard_map implementations bit-comparable).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["check_iteration_sample", "assert_samples_equal"]
+
+
+def check_iteration_sample(sample, P: int, Q: int, n: int, M: int, L: int,
+                           b_count: int, c_count: int, d_count_local: int):
+    """Assert every structural invariant of one IterationSample."""
+    mask_b = np.asarray(sample.mask_b)
+    mask_c = np.asarray(sample.mask_c)
+    mask_d = np.asarray(sample.mask_d)
+    pi = np.asarray(sample.pi)
+    J = np.asarray(sample.J)
+
+    assert mask_b.shape == (M,) and mask_c.shape == (M,), (
+        mask_b.shape, mask_c.shape, M)
+    for name, m in (("mask_b", mask_b), ("mask_c", mask_c),
+                    ("mask_d", mask_d)):
+        assert set(np.unique(m)) <= {0.0, 1.0}, (name, np.unique(m))
+    assert int(mask_b.sum()) == b_count, (int(mask_b.sum()), b_count)
+    assert int(mask_c.sum()) == c_count, (int(mask_c.sum()), c_count)
+    assert (mask_c <= mask_b).all(), "C^t must be a subset of B^t"
+
+    assert mask_d.shape == (P * n,), (mask_d.shape, P, n)
+    per_part = mask_d.reshape(P, n).sum(axis=1)
+    assert (per_part == d_count_local).all(), (
+        "D^t must be stratified per observation partition", per_part,
+        d_count_local)
+
+    assert pi.shape == (Q, P), (pi.shape, Q, P)
+    for q in range(Q):
+        assert sorted(pi[q].tolist()) == list(range(P)), (
+            f"pi_{q} is not a permutation", pi[q])
+
+    assert J.shape == (P, Q, L), (J.shape, P, Q, L)
+    assert J.min() >= 0 and J.max() < n, (
+        "J rows must be local indices in [0, n)", J.min(), J.max(), n)
+
+
+def assert_samples_equal(s1, s2):
+    """Bitwise equality of two IterationSamples (fold_in determinism)."""
+    for name, a, b in zip(s1._fields, s1, s2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"field {name} differs")

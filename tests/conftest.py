@@ -22,3 +22,10 @@ enable_compilation_cache(
 warnings.filterwarnings(
     "ignore", message=".*default axis_types will change.*",
     category=DeprecationWarning)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/*.json from the current implementation "
+             "(tests/test_goldens.py) instead of comparing against them")

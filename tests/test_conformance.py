@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import engine, losses
+from repro.core import driver, engine, losses
 from repro.testing import (BITWISE, CONFORMANCE_ITERS, F32_REDUCTION,
                            QUANTIZED, assert_objectives_close,
                            assert_trajectories_close, make_problem,
@@ -131,6 +131,129 @@ def test_reference_is_bitwise_deterministic(problem):
     ws1 = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
     ws2 = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
     assert_trajectories_close(ws1, ws2, BITWISE, "reference-vs-reference")
+
+
+# ---------------------------------------------------------------------------
+# Scan-compiled driver parity: for every backend, the fused device program
+# (repro.core.driver) must reproduce the legacy per-iteration Python loop's
+# (t, F) history from the same seed, under the existing tolerance policies.
+# ---------------------------------------------------------------------------
+DRIVER_BACKENDS = engine.BACKENDS + engine.BASELINE_BACKENDS
+
+
+def _driver_kwargs(backend, request):
+    return ({"mesh": request.getfixturevalue("mesh")}
+            if backend in _DISTRIBUTED else {})
+
+
+@pytest.mark.parametrize("backend", DRIVER_BACKENDS)
+def test_driver_matches_python_loop(backend, problem, request):
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    kw = _driver_kwargs(backend, request)
+    key = jax.random.PRNGKey(1)
+    s_scan, h_scan = driver.run(key, X, y, cfg, CONFORMANCE_ITERS, backend,
+                                record_every=2, **kw)
+    s_loop, h_loop = driver.run_python_loop(key, X, y, cfg, CONFORMANCE_ITERS,
+                                            backend, record_every=2, **kw)
+    assert [t for t, _ in h_scan] == [t for t, _ in h_loop]
+    for (t, f_loop), (_, f_scan) in zip(h_loop, h_scan):
+        assert_objectives_close(f_loop, f_scan, F32_REDUCTION,
+                                f"driver/{backend}/t={t}")
+    assert_trajectories_close([np.asarray(s_loop.w)], [np.asarray(s_scan.w)],
+                              F32_REDUCTION, f"driver/{backend}/final-w")
+    assert int(s_scan.t) == int(s_loop.t) == CONFORMANCE_ITERS + 1
+
+
+@pytest.mark.parametrize("iters,record_every,want",
+                         [(0, 1, [0]), (1, 5, [0, 1]), (5, 2, [0, 2, 4, 5]),
+                          (6, 3, [0, 3, 6]), (4, 1, [0, 1, 2, 3, 4])])
+def test_driver_record_ticks(iters, record_every, want):
+    assert list(driver.record_ticks(iters, record_every)) == want
+
+
+def test_driver_validates_arguments():
+    cfg = _cfg("hinge", "diminishing")
+    with pytest.raises(ValueError, match="record_every"):
+        driver.record_ticks(3, 0)
+    with pytest.raises(ValueError, match="iters"):
+        driver.record_ticks(-1, 1)
+    with pytest.raises(ValueError, match="unknown backend"):
+        driver.make_run(cfg, 2, "mpi")
+
+
+def test_driver_does_not_delete_caller_key(problem):
+    """The driver donates its state buffers; the caller's key must survive
+    (the donated key is an internal copy, not an alias)."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    key = jax.random.PRNGKey(7)
+    driver.run(key, X, y, cfg, 2)
+    jnp.asarray(key) + 0  # raises RuntimeError if the buffer was donated
+
+
+def test_driver_record_objective_false_is_pure_iteration(problem):
+    """record_objective=False: empty history buffer, identical final state
+    (the mode perf analysis lowers so the monitoring objective's collectives
+    don't pollute the step's communication profile)."""
+    from repro.core.sodda import init_state
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    key = jax.random.PRNGKey(5)
+    silent = driver.make_run(cfg, 3, "reference", record_objective=False)
+    s1, fs = silent(init_state(jnp.array(key, copy=True), cfg.M), X, y)
+    assert fs.shape == (0,)
+    s2, _ = driver.run(key, X, y, cfg, 3)
+    np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(s2.w))
+
+
+def test_driver_compiled_run_is_cached(problem):
+    cfg = _cfg("hinge", "diminishing")
+    r1 = driver.make_run(cfg, 3, "reference", record_every=2)
+    r2 = driver.make_run(cfg, 3, "reference", record_every=2)
+    assert r1 is r2
+    assert driver.make_run(cfg, 3, "reference") is not r1
+
+
+# ---------------------------------------------------------------------------
+# radisa-avg: the baseline lives behind the same registry as SODDA.
+# ---------------------------------------------------------------------------
+def test_radisa_avg_backend_registered(problem):
+    from repro.core import radisa
+    assert "radisa-avg" in engine.available_backends()
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    step = engine.make_step(cfg, "radisa-avg")
+    s0 = engine.init_state(jax.random.PRNGKey(2), cfg.M)
+    np.testing.assert_array_equal(
+        np.asarray(step(s0, X, y).w),
+        np.asarray(radisa.radisa_avg_step(s0, X, y, cfg).w))
+
+
+def test_radisa_avg_backend_rejects_distributed_options():
+    cfg = _cfg("hinge", "diminishing")
+    with pytest.raises(ValueError, match="no collectives"):
+        engine.make_step(cfg, "radisa-avg", compress_mu=True)
+    with pytest.raises(ValueError, match="takes no mesh"):
+        engine.make_step(cfg, "radisa-avg",
+                         mesh=sodda_test_mesh(small_fixture_config()))
+
+
+def test_radisa_avg_run_matches_python_loop(problem):
+    """engine.run (scan driver) vs the legacy per-iteration loop for the
+    radisa-avg backend — a genuinely independent execution path (the scan
+    program vs per-step dispatch), unlike radisa.run_radisa_avg which is
+    itself a driver.run wrapper."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    key = jax.random.PRNGKey(3)
+    _, h_eng = engine.run(key, X, y, cfg, iters=4, backend="radisa-avg")
+    _, h_loop = driver.run_python_loop(key, X, y, cfg, 4, "radisa-avg")
+    assert [t for t, _ in h_eng] == [t for t, _ in h_loop]
+    for (t, f_loop), (_, f_scan) in zip(h_loop, h_eng):
+        assert_objectives_close(f_loop, f_scan, F32_REDUCTION,
+                                f"radisa-avg/t={t}")
+    assert h_eng[-1][1] < h_eng[0][1]  # the baseline still descends
 
 
 # ---------------------------------------------------------------------------

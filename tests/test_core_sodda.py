@@ -59,6 +59,31 @@ def test_pi_is_permutation():
         assert sorted(np.asarray(pi[q]).tolist()) == list(range(13))
 
 
+def test_sample_iteration_invariants_fallback():
+    """Hypothesis-free fallback for the sample_iteration property suite in
+    tests/test_property.py — same shared checker
+    (repro.testing.check_iteration_sample), fixed seed/shape sweep."""
+    from repro.testing import assert_samples_equal, check_iteration_sample
+    cases = [
+        # (seed, t, P, Q, n, mt, L, b_frac, c_frac, d_frac)
+        (0, 0, 2, 2, 8, 4, 4, 0.85, 0.80, 0.85),
+        (1, 7, 4, 3, 10, 2, 3, 1.0, 1.0, 1.0),
+        (2, 1, 1, 1, 2, 1, 1, 0.01, 0.01, 0.01),
+        (3, 999, 3, 2, 6, 3, 5, 0.5, 0.9, 0.33),
+    ]
+    for seed, t, P, Q, n, mt, L, bf, cf, df in cases:
+        M = Q * P * mt
+        b = max(1, int(round(bf * M)))
+        c = max(1, min(b, int(round(cf * M))))
+        d = max(1, int(round(df * n)))
+        key = jax.random.PRNGKey(seed)
+        s = sample_iteration(key, t, P, Q, n, M, L, b, c, d)
+        check_iteration_sample(s, P, Q, n, M, L, b, c, d)
+        # fold_in determinism: pure function of (key, t)
+        assert_samples_equal(
+            s, sample_iteration(key, t, P, Q, n, M, L, b, c, d))
+
+
 def test_step19_concatenation_conflict_free(data):
     """Each omega sub-block must be written by exactly one worker: running
     one step twice with the same key gives identical iterates (pure fn)."""
@@ -142,22 +167,6 @@ def test_elastic_rescale_continues_converging(data):
         state2 = sodda.sodda_step(state2, X2, y2, cfg2)
     f_after = float(losses.objective(CFG.loss, X2, y2, state2.w))
     assert f_after < f_before, (f_before, f_after)
-
-
-def test_exact_count_mask_cardinality_and_nesting():
-    """Hypothesis-free fallback for the partition invariants: the mask keeps
-    exactly `count` coordinates, and nested thresholds give C ⊆ B."""
-    from repro.core.partition import _exact_count_mask
-    for seed, count, n in [(0, 1, 2), (1, 7, 64), (2, 63, 64), (3, 64, 64),
-                           (4, 13, 200)]:
-        u = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
-        m = _exact_count_mask(u, count)
-        assert int(m.sum()) == count, (seed, count, n)
-        assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
-        # nesting: a smaller count on the same u selects a subset
-        for smaller in {1, count // 2} - {0}:
-            mc = _exact_count_mask(u, smaller)
-            assert bool(jnp.all(mc <= m)), (seed, count, smaller)
 
 
 def test_inner_loop_zero_iterations_is_identity():

@@ -1,0 +1,84 @@
+"""Golden-trajectory regression tests.
+
+Seeded reference trajectories (small SVM/hinge + logistic problems) are
+checked into ``tests/goldens/*.json``. Any silent numeric drift in
+``sodda_step`` / ``inner_loop`` / ``sample_iteration`` — a changed fold_in
+scheme, a reordered update, a different mask rule — moves the trajectory
+and fails here, even if every behavioural test still passes.
+
+After an *intentional* numeric change, regenerate with:
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+
+and review the golden diff like any other code change. The comparison
+tolerance (GOLDEN_RTOL) admits cross-platform f32 reduction-order wiggle
+only — same-platform reruns reproduce the goldens bitwise.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import driver
+from repro.testing import make_problem, small_fixture_config
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
+GOLDEN_RTOL = 1e-5
+GOLDEN_ATOL = 1e-7
+ITERS, RECORD_EVERY, SEED = 8, 2, 1
+W_HEAD = 16  # leading iterate coordinates pinned verbatim
+
+PROBLEMS = [("svm_hinge_small", "hinge"), ("logistic_small", "logistic")]
+
+
+def _compute(loss):
+    cfg = small_fixture_config(loss)
+    X, y = make_problem(cfg)
+    state, hist = driver.run(jax.random.PRNGKey(SEED), X, y, cfg, ITERS,
+                             "reference", record_every=RECORD_EVERY)
+    w = np.asarray(state.w, np.float64)
+    return {
+        "config": cfg.name, "loss": loss, "seed": SEED,
+        "iters": ITERS, "record_every": RECORD_EVERY,
+        "history_t": [int(t) for t, _ in hist],
+        "history_F": [v for _, v in hist],
+        "w_head": w[:W_HEAD].tolist(),
+        "w_norm": float(np.linalg.norm(w)),
+        "w_sum": float(w.sum()),
+    }
+
+
+@pytest.mark.parametrize("name,loss", PROBLEMS)
+def test_golden_trajectory(name, loss, request):
+    path = GOLDEN_DIR / f"{name}.json"
+    got = _compute(loss)
+    if request.config.getoption("--update-goldens"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1) + "\n")
+        pytest.skip(f"golden updated: {path}")
+    assert path.exists(), (
+        f"missing golden {path}; generate with pytest --update-goldens")
+    want = json.loads(path.read_text())
+
+    for k in ("config", "loss", "seed", "iters", "record_every", "history_t"):
+        assert got[k] == want[k], (k, got[k], want[k])
+    err = (f"reference trajectory drifted from {path.name}; if intentional, "
+           "rerun with --update-goldens and review the diff")
+    np.testing.assert_allclose(got["history_F"], want["history_F"],
+                               rtol=GOLDEN_RTOL, atol=GOLDEN_ATOL,
+                               err_msg=err)
+    np.testing.assert_allclose(got["w_head"], want["w_head"],
+                               rtol=GOLDEN_RTOL, atol=GOLDEN_ATOL,
+                               err_msg=err)
+    np.testing.assert_allclose([got["w_norm"], got["w_sum"]],
+                               [want["w_norm"], want["w_sum"]],
+                               rtol=GOLDEN_RTOL, atol=GOLDEN_ATOL,
+                               err_msg=err)
+
+
+def test_goldens_checked_in():
+    """CI must never silently run zero golden comparisons."""
+    missing = [n for n, _ in PROBLEMS if not (GOLDEN_DIR / f"{n}.json").exists()]
+    assert not missing, f"goldens missing from the repo: {missing}"

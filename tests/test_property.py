@@ -4,8 +4,6 @@ Collectable without hypothesis installed (the whole module skips);
 hypothesis-free fallbacks for the core invariants live in
 tests/test_core_sodda.py.
 """
-import dataclasses
-
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -16,10 +14,11 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.configs.sodda_svm import SoddaConfig
-from repro.core import losses, sodda
+from repro.core import sodda
 from repro.core.partition import (_exact_count_mask, pi_permutations,
                                   sample_iteration)
 from repro.kernels import ref
+from repro.testing import assert_samples_equal, check_iteration_sample
 
 hypothesis.settings.register_profile(
     "ci", settings(max_examples=20, deadline=None))
@@ -41,15 +40,57 @@ def test_pi_permutations_property(Q, P, seed):
         assert sorted(pi[q].tolist()) == list(range(P))
 
 
-@given(st.integers(0, 2**31 - 1), st.floats(0.2, 1.0), st.floats(0.1, 1.0))
-def test_nested_masks_C_subset_B(seed, b_frac, c_frac):
-    """Paper step 6: C^t must be a subset of B^t for any fractions."""
-    M = 64
-    b = max(1, int(b_frac * M))
-    c = max(1, min(b, int(c_frac * b)))
-    s = sample_iteration(jax.random.PRNGKey(seed), 0, 2, 2, 8, M, 4, b, c, 4)
-    assert int(s.mask_b.sum()) == b and int(s.mask_c.sum()) == c
-    assert bool(jnp.all(s.mask_c <= s.mask_b))  # C ⊆ B
+# ---------------------------------------------------------------------------
+# sample_iteration: the full invariant set of one outer iteration's
+# randomness, over arbitrary grids / fractions / iteration counters.
+# (hypothesis-free fallback: tests/test_core_sodda.py, same checker.)
+# ---------------------------------------------------------------------------
+grids = st.tuples(st.integers(1, 4), st.integers(1, 4),  # P, Q
+                  st.integers(2, 10),                    # n per partition
+                  st.integers(1, 4),                     # m_tilde
+                  st.integers(1, 5))                     # L
+fracs = st.floats(0.01, 1.0)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 10_000), grids,
+       fracs, fracs, fracs)
+def test_sample_iteration_invariants(seed, t, grid, b_frac, c_frac, d_frac):
+    """pi is a permutation per q, |B|=b and |C|=c with C ⊆ B, D stratified
+    per partition, J row indices in [0, n) — for any grid and fractions."""
+    P, Q, n, mt, L = grid
+    M = Q * P * mt
+    b = max(1, int(round(b_frac * M)))
+    c = max(1, min(b, int(round(c_frac * M))))
+    d = max(1, int(round(d_frac * n)))
+    s = sample_iteration(jax.random.PRNGKey(seed), t, P, Q, n, M, L, b, c, d)
+    check_iteration_sample(s, P, Q, n, M, L, b, c, d)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 10_000), grids)
+def test_sample_iteration_fold_in_determinism(seed, t, grid):
+    """The draw is a pure function of (key, t): re-sampling bitwise-repeats.
+    This is what lets the shard_map workers reconstruct the same randomness
+    independently, with no communication."""
+    P, Q, n, mt, L = grid
+    M = Q * P * mt
+    b, c, d = max(1, M // 2), max(1, M // 3), max(1, n // 2)
+    key = jax.random.PRNGKey(seed)
+    s1 = sample_iteration(key, t, P, Q, n, M, L, b, c, d)
+    s2 = sample_iteration(key, t, P, Q, n, M, L, b, c, d)
+    assert_samples_equal(s1, s2)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_sample_iteration_varies_with_t(seed):
+    """Successive outer iterations draw fresh randomness: on a space large
+    enough that collisions are astronomically unlikely, the B-mask must
+    change between t and t+1 (fold_in actually folds the counter)."""
+    P, Q, n, mt, L = 2, 2, 16, 16, 4
+    M = Q * P * mt  # 64 features, |B|=32: C(64,32) ~ 1.8e18 possible masks
+    key = jax.random.PRNGKey(seed)
+    s1 = sample_iteration(key, 0, P, Q, n, M, L, M // 2, M // 4, n // 2)
+    s2 = sample_iteration(key, 1, P, Q, n, M, L, M // 2, M // 4, n // 2)
+    assert not np.array_equal(np.asarray(s1.mask_b), np.asarray(s2.mask_b))
 
 
 @given(st.integers(0, 2**31 - 1))
