@@ -27,46 +27,41 @@ from repro.compat import shard_map
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 from repro.core.partition import _exact_count_mask
-from repro.core.sodda import SoddaState, _counts, inner_loop
+from repro.core.sodda import SoddaState, _counts, _gamma, inner_loop
 
-__all__ = ["make_distributed_step", "distributed_objective"]
+__all__ = ["make_distributed_step", "make_local_halves",
+           "distributed_objective"]
 
 
-def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
-                          compress_mu: bool = False, compress_z: bool = False,
-                          use_kernel: bool = False):
-    """Build the jitted shard_map SODDA step for `mesh` (data=P, model=Q).
+def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
+                      compress_mu: bool = False, compress_z: bool = False,
+                      use_kernel: bool = False):
+    """The per-device *issue*/*consume* halves of one outer iteration.
 
-    gather_deltas=True uses an all_gather of the m_tilde-sized updated
-    sub-blocks along 'data' ((P-1)/P * m bytes/device); False uses a psum of
-    an m-sized zero-padded delta (2(P-1)/P * m) — kept for the perf ablation
-    in EXPERIMENTS.md §Perf.
+    ``issue_local`` performs paper steps 5-8: sample B/C/D, reduce the
+    partial inner products over 'model', and psum the C-masked snapshot
+    gradient over 'data' — everything the iteration puts on the wire for the
+    exchange. ``consume_local`` performs steps 10-19 against a *given*
+    ``mu_q``: block assignment, the fully-local inner loop, and the
+    sub-block assembly collective.
 
-    compress_mu=True runs the snapshot-gradient psum over 'data' through the
-    int8 quantized all-reduce (grad_compression) — composing the paper's own
-    C^t coordinate masking with 4x narrower wires. The inner loop tolerates
-    a slightly perturbed mu (it is already a stochastic estimate; Theorem 1
-    only needs bounded second moments).
-
-    use_kernel=True runs the fully-local inner loop through the Pallas
-    kernel wrapper (``repro.kernels.ops.sodda_inner`` with a per-device
-    batch of one block) — the 'shard_map+pallas' engine backend.
+    The synchronous :func:`make_distributed_step` composes them back to back
+    (consume blocks on issue); a stale-by-one mesh step would instead feed
+    ``consume_local`` the previous iteration's ``mu_q`` from an extended
+    carry, exactly as the single-host ``async`` backend does with
+    ``repro.core.sodda.sodda_step_async``. Both halves re-derive their
+    randomness from ``fold_in(key, t)``, so they need no shared state beyond
+    ``(t, key)``.
     """
-    Pn, Qn = mesh.shape["data"], mesh.shape["model"]
-    assert (Pn, Qn) == (cfg.P, cfg.Q), (mesh.shape, cfg)
     n, m, mt, L, M = cfg.n, cfg.m, cfg.m_tilde, cfg.L, cfg.M
     b_count, c_count, d_local = _counts(cfg)
     deriv = functools.partial(losses.loss_deriv, cfg.loss)
 
-    def step_local(X_loc, y_loc, w_loc, t, key):
+    def issue_local(X_loc, y_loc, w_loc, t, key):
         p = jax.lax.axis_index("data")
         q = jax.lax.axis_index("model")
-        gamma = (
-            cfg.lr0 / (1.0 + jnp.sqrt(jnp.maximum(t - 1, 0).astype(jnp.float32)))
-            if cfg.constant_lr <= 0 else jnp.float32(cfg.constant_lr)
-        )
         kt = jax.random.fold_in(key, t)
-        kb, kd, kp, kj = jax.random.split(kt, 4)
+        kb, kd, _, _ = jax.random.split(kt, 4)
 
         # --- steps 5-7: B^t / C^t / D^t (B, C identical on all devices) ---
         u = jax.random.uniform(kb, (M,))
@@ -95,6 +90,14 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
             mu_q = compressed_psum(mu_part, "data")  # int8 wires, f32 out
         else:
             mu_q = jax.lax.psum(mu_part, "data")  # (m,)
+        return mu_q
+
+    def consume_local(X_loc, y_loc, w_loc, mu_q, t, key):
+        p = jax.lax.axis_index("data")
+        q = jax.lax.axis_index("model")
+        gamma = _gamma(cfg, t)
+        kt = jax.random.fold_in(key, t)
+        _, _, kp, kj = jax.random.split(kt, 4)
 
         # --- step 10: pi_q block assignment (one sub-block per worker) ---
         pi_q = jax.random.permutation(jax.random.fold_in(kp, q), cfg.P)
@@ -127,6 +130,42 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
             delta = jax.lax.dynamic_update_slice(delta, wL - w0, (k * mt,))
             w_new = w_loc + jax.lax.psum(delta, "data")
         return w_new
+
+    return issue_local, consume_local
+
+
+def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
+                          compress_mu: bool = False, compress_z: bool = False,
+                          use_kernel: bool = False):
+    """Build the jitted shard_map SODDA step for `mesh` (data=P, model=Q).
+
+    The step composes the :func:`make_local_halves` pair synchronously:
+    consume blocks on the exchange it just issued.
+
+    gather_deltas=True uses an all_gather of the m_tilde-sized updated
+    sub-blocks along 'data' ((P-1)/P * m bytes/device); False uses a psum of
+    an m-sized zero-padded delta (2(P-1)/P * m) — kept for the perf ablation
+    in EXPERIMENTS.md §Perf.
+
+    compress_mu=True runs the snapshot-gradient psum over 'data' through the
+    int8 quantized all-reduce (grad_compression) — composing the paper's own
+    C^t coordinate masking with 4x narrower wires. The inner loop tolerates
+    a slightly perturbed mu (it is already a stochastic estimate; Theorem 1
+    only needs bounded second moments).
+
+    use_kernel=True runs the fully-local inner loop through the Pallas
+    kernel wrapper (``repro.kernels.ops.sodda_inner`` with a per-device
+    batch of one block) — the 'shard_map+pallas' engine backend.
+    """
+    Pn, Qn = mesh.shape["data"], mesh.shape["model"]
+    assert (Pn, Qn) == (cfg.P, cfg.Q), (mesh.shape, cfg)
+    issue_local, consume_local = make_local_halves(
+        cfg, gather_deltas=gather_deltas, compress_mu=compress_mu,
+        compress_z=compress_z, use_kernel=use_kernel)
+
+    def step_local(X_loc, y_loc, w_loc, t, key):
+        mu_q = issue_local(X_loc, y_loc, w_loc, t, key)
+        return consume_local(X_loc, y_loc, w_loc, mu_q, t, key)
 
     smapped = shard_map(
         step_local,

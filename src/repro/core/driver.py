@@ -15,11 +15,43 @@ experiments). This module fuses the whole run on device:
   * the host sees exactly one dispatch and one device->host transfer, at
     the very end.
 
+record_every chunking semantics
+-------------------------------
+The scan's xs is the sequence of *chunk lengths*: ``iters // record_every``
+full chunks of ``record_every`` steps each, plus one shorter tail chunk of
+``iters % record_every`` steps when it does not divide evenly. Each scan
+step evaluates the objective at the chunk's *entry* iterate, then advances
+the carry through its chunk with an inner ``fori_loop``; one final
+objective evaluation after the scan covers the last iterate. The recorded
+ticks are therefore ``record_ticks(iters, record_every)`` — every multiple
+of ``record_every`` strictly below ``iters``, plus ``iters`` itself (e.g.
+``(0, 2, 4, 5)`` for ``iters=5, record_every=2``). ``record_every`` changes
+only *observation* cadence, never the trajectory: the same ``iters`` steps
+run regardless.
+
+Carry contract
+--------------
+The scan carry is whatever the backend's :class:`repro.core.engine
+.StepBundle` defines. The compiled program is ``finalize(scan(step, ...,
+init_carry(state, X, y)))``: ``init_carry`` is the warm-up half (the async
+backend issues its first exchange there, so the first consumed buffer is
+valid — traced into the same single dispatch, not a separate call), and
+``finalize`` strips any extra buffers back to a plain ``SoddaState``.
+Every carry exposes ``.w``, which is how the objective is recorded
+mid-scan. The ``state`` argument of the compiled run is donated — its
+buffers are consumed by the first use inside the program and must not be
+reused by the caller (regression-tested in ``tests/test_conformance.py``).
+
 :func:`run` keeps the exact ``(final_state, [(t, F(w^t))])`` contract of the
 legacy drivers (``engine.run`` / ``sodda.run`` / ``radisa.run_radisa_avg``
 are now thin wrappers over it). :func:`run_python_loop` preserves the old
 per-iteration dispatch loop as the benchmark baseline and the parity oracle
-for ``tests/test_conformance.py``.
+for ``tests/test_conformance.py``. Note that backends may be
+bitwise-nondeterministic *relative to the reference trajectory* while still
+correct — the async backend legitimately diverges iterate-by-iterate and is
+held to the relaxed ``STALENESS`` policy of ``repro.testing.tolerances``
+instead; scan-vs-loop parity for the *same* backend still holds for every
+backend, async included.
 """
 from __future__ import annotations
 
@@ -69,20 +101,27 @@ def _cached_run(cfg: SoddaConfig, iters: int, backend: str, record_every: int,
     """
     from repro.core import engine  # local: engine imports core.sodda
 
-    step = engine.make_step(cfg, backend, mesh=mesh, **dict(options))
+    bundle = engine.make_bundle(cfg, backend, mesh=mesh, **dict(options))
     obj = functools.partial(losses.objective, cfg.loss)
     lens = jnp.asarray(_chunk_lengths(iters, record_every), jnp.int32)
 
     def _run(state, X, y):
-        def chunk(s, length):
-            f = obj(X, y, s.w) if record_objective else None  # on device
-            s = jax.lax.fori_loop(0, length, lambda _, t: step(t, X, y), s)
-            return s, f
+        # warm-up half: build the backend's scan carry (for the async
+        # backend this issues the first exchange) — traced into this same
+        # program, so it costs no extra dispatch
+        carry = bundle.init_carry(state, X, y)
 
-        state, fs = jax.lax.scan(chunk, state, lens)
+        def chunk(c, length):
+            f = obj(X, y, c.w) if record_objective else None  # on device
+            c = jax.lax.fori_loop(0, length,
+                                  lambda _, cc: bundle.step(cc, X, y), c)
+            return c, f
+
+        carry, fs = jax.lax.scan(chunk, carry, lens)
+        final = bundle.finalize(carry)
         if not record_objective:
-            return state, jnp.zeros((0,), jnp.float32)
-        return state, jnp.concatenate([fs, obj(X, y, state.w)[None]])
+            return final, jnp.zeros((0,), jnp.float32)
+        return final, jnp.concatenate([fs, obj(X, y, final.w)[None]])
 
     # donate the state buffers: the iterate is rewritten in place over the
     # whole trajectory rather than round-tripping per iteration
@@ -131,10 +170,10 @@ def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_loop_step(cfg: SoddaConfig, backend: str, mesh,
-                      options: Tuple[Tuple[str, object], ...]):
+def _cached_loop_bundle(cfg: SoddaConfig, backend: str, mesh,
+                        options: Tuple[Tuple[str, object], ...]):
     from repro.core import engine
-    return engine.make_step(cfg, backend, mesh=mesh, **dict(options))
+    return engine.make_bundle(cfg, backend, mesh=mesh, **dict(options))
 
 
 @functools.lru_cache(maxsize=8)
@@ -157,13 +196,15 @@ def run_python_loop(key, X, y, cfg: SoddaConfig, iters: int,
     from repro.core.sodda import init_state
 
     record_ticks(iters, record_every)  # same argument validation as run()
-    step = _cached_loop_step(cfg, backend, mesh, tuple(sorted(options.items())))
+    bundle = _cached_loop_bundle(cfg, backend, mesh,
+                                 tuple(sorted(options.items())))
     obj = _cached_objective(cfg.loss)
-    state = init_state(key, cfg.M)
+    carry = bundle.init_carry(init_state(key, cfg.M), X, y)
     hist = []
     for it in range(iters):
         if it % record_every == 0:
-            hist.append((it, float(obj(X, y, state.w))))
-        state = step(state, X, y)
+            hist.append((it, float(obj(X, y, carry.w))))
+        carry = bundle.step(carry, X, y)
+    state = bundle.finalize(carry)
     hist.append((iters, float(obj(X, y, state.w))))
     return state, hist

@@ -14,21 +14,32 @@ Backends
 ``pallas``             reference driver + Pallas inner kernel (``kernels``)
 ``shard_map``          doubly-distributed step on a mesh (``core.distributed``)
 ``shard_map+pallas``   distributed step with the Pallas inner kernel
+``async``              stale-by-one delta exchange: the snapshot-gradient
+                       exchange is double-buffered in an extended scan
+                       carry, so iteration t consumes the buffer issued at
+                       t-1 (``core.sodda.sodda_step_async``)
 
 Options orthogonal to the backend (``EngineOptions``): delta exchange
-strategy (``gather_deltas``) and int8 wire compression of the two dominant
+strategy (``gather_deltas``), int8 wire compression of the two dominant
 collectives (``compress_z``, ``compress_mu``) — meaningful only for the
-distributed backends, and rejected with ``ValueError`` elsewhere so a silent
-no-op can never masquerade as a measured ablation.
+distributed backends — and ``staleness`` (0 or 1), meaningful only for the
+``async`` backend. All are rejected with ``ValueError`` on backends they
+cannot affect, so a silent no-op can never masquerade as a measured
+ablation.
 
 Every step function returned by :func:`make_step` has the uniform signature
-``step(state: SoddaState, X, y) -> SoddaState`` regardless of backend.
+``step(carry, X, y) -> carry``. For most backends the carry IS the plain
+``SoddaState``; a backend may instead extend the scan carry (the async
+backend threads its exchange buffer through it), in which case the carry
+still exposes ``.w``/``.t``/``.key`` and :func:`make_bundle` provides the
+``init_carry`` (warm-up) and ``finalize`` halves the driver composes around
+the scan. See ``docs/architecture.md`` for the full carry contract.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 
@@ -39,10 +50,13 @@ from repro.core.sodda import SoddaState, init_state, iteration_flops  # noqa: F4
 __all__ = [
     "BACKENDS",
     "BASELINE_BACKENDS",
+    "ASYNC_BACKENDS",
     "EngineOptions",
+    "StepBundle",
     "available_backends",
     "register_backend",
     "make_step",
+    "make_bundle",
     "make_objective",
     "make_mesh_for",
     "run",
@@ -69,6 +83,7 @@ class EngineOptions:
     gather_deltas: bool = True
     compress_mu: bool = False
     compress_z: bool = False
+    staleness: Optional[int] = None  # async backend only; None = backend default
 
     @property
     def distributed_kwargs(self):
@@ -89,18 +104,60 @@ class EngineOptions:
                 f"backend {backend!r} runs on one host and takes no mesh; "
                 "pass mesh only to distributed backends")
 
+    def require_synchronous(self, backend: str):
+        if self.staleness is not None:
+            raise ValueError(
+                f"backend {backend!r} exchanges synchronously; staleness is "
+                "only meaningful for the 'async' backend")
+
 
 StepFn = Callable[..., SoddaState]
+
+
+class StepBundle(NamedTuple):
+    """A backend's step plus its scan-carry protocol.
+
+    Most backends carry the plain ``SoddaState`` through the scan; a backend
+    may extend the carry with extra buffers (the async backend double-buffers
+    its exchange vector there). The driver composes the three halves into
+    one compiled program::
+
+        carry = init_carry(state, X, y)   # warm-up: build/validate buffers
+        carry = step(carry, X, y)         # repeated inside the scan
+        state = finalize(carry)           # strip buffers back to SoddaState
+
+    ``init_carry`` runs *inside* the driver's single compiled dispatch (it
+    is traced, not eagerly executed), so a warm-up exchange costs no extra
+    host round-trip. Every carry must expose ``.w`` so the driver can record
+    the objective mid-scan. Plain step functions are wrapped into trivial
+    bundles by :func:`make_bundle` (identity init/finalize).
+    """
+
+    step: StepFn  # (carry, X, y) -> carry
+    init_carry: Callable  # (SoddaState, X, y) -> carry
+    finalize: Callable  # carry -> SoddaState
+
+
+def _as_bundle(obj) -> StepBundle:
+    if isinstance(obj, StepBundle):
+        return obj
+    return StepBundle(step=obj,
+                      init_carry=lambda state, X, y: state,
+                      finalize=lambda carry: carry)
+
+
 BackendFactory = Callable[[SoddaConfig, EngineOptions], StepFn]
 
 _REGISTRY: Dict[str, BackendFactory] = {}
 
 
 def register_backend(name: str):
-    """Register a backend factory ``f(cfg, opts) -> step``; returns f.
+    """Register a backend factory ``f(cfg, opts) -> step | StepBundle``.
 
-    Future scaling work (multi-host, async, new exchange schemes) plugs in
-    here and is immediately covered by the conformance matrix.
+    A factory may return a plain step (carried state is ``SoddaState``) or a
+    :class:`StepBundle` when the backend extends the scan carry. Future
+    scaling work (multi-host, new exchange schemes) plugs in here and is
+    immediately covered by the conformance matrix.
     """
 
     def deco(factory: BackendFactory) -> BackendFactory:
@@ -137,6 +194,7 @@ def _resolve_mesh(cfg: SoddaConfig, opts: EngineOptions):
 @register_backend("reference")
 def _reference(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     opts.require_no_wires("reference")
+    opts.require_synchronous("reference")
 
     def step(state, X, y):
         return sodda.sodda_step(state, X, y, cfg, use_kernel=False)
@@ -147,6 +205,7 @@ def _reference(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
 @register_backend("pallas")
 def _pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     opts.require_no_wires("pallas")
+    opts.require_synchronous("pallas")
 
     def step(state, X, y):
         return sodda.sodda_step(state, X, y, cfg, use_kernel=True)
@@ -157,6 +216,7 @@ def _pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
 @register_backend("shard_map")
 def _shard_map(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     from repro.core.distributed import make_distributed_step
+    opts.require_synchronous("shard_map")
     return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
                                  **opts.distributed_kwargs)
 
@@ -164,6 +224,7 @@ def _shard_map(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
 @register_backend("shard_map+pallas")
 def _shard_map_pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     from repro.core.distributed import make_distributed_step
+    opts.require_synchronous("shard_map+pallas")
     return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
                                  use_kernel=True, **opts.distributed_kwargs)
 
@@ -173,6 +234,7 @@ def _radisa_avg(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     """RADiSA-avg baseline (Nathan & Klabjan) behind the same registry, so
     every driver/benchmark runs baselines and SODDA through one code path."""
     opts.require_no_wires("radisa-avg")
+    opts.require_synchronous("radisa-avg")
     from repro.core import radisa
 
     def step(state, X, y):
@@ -181,17 +243,57 @@ def _radisa_avg(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     return step
 
 
+@register_backend("async")
+def _async(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
+    """Stale-by-one delta exchange on the extended scan carry.
+
+    The snapshot-gradient exchange is double-buffered in the carry
+    (``AsyncSoddaState.mu``): iteration t's inner loop consumes the buffer
+    issued at t-1 while issuing its own, so the exchange overlaps the
+    compute it has no data dependence on instead of blocking it. The carry
+    is initialized by a one-iteration warm-up exchange (``init_carry``, run
+    inside the driver's compiled program) and stripped back to a plain
+    ``SoddaState`` by ``finalize``. ``staleness=0`` degenerates to the
+    synchronous schedule — the exact-parity anchor of the conformance suite.
+    """
+    opts.require_no_wires("async")
+    staleness = 1 if opts.staleness is None else int(opts.staleness)
+    if staleness not in (0, 1):
+        raise ValueError(
+            f"staleness must be 0 (synchronous parity) or 1 (stale-by-one), "
+            f"got {opts.staleness!r}")
+
+    def step(carry, X, y):
+        return sodda.sodda_step_async(carry, X, y, cfg, staleness=staleness)
+
+    def init_carry(state, X, y):
+        return sodda.init_async_state(state, X, y, cfg)
+
+    def finalize(carry):
+        return carry.sync_state()
+
+    return StepBundle(step=step, init_carry=init_carry, finalize=finalize)
+
+
 BACKENDS = ("reference", "pallas", "shard_map", "shard_map+pallas")
 BASELINE_BACKENDS = ("radisa-avg",)
+ASYNC_BACKENDS = ("async",)
 
 
 # ---------------------------------------------------------------------------
 # Public constructors
 # ---------------------------------------------------------------------------
-def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
-              gather_deltas: bool = True, compress_mu: bool = False,
-              compress_z: bool = False) -> StepFn:
-    """Build a SODDA step ``(state, X, y) -> state`` for `backend`."""
+def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
+                gather_deltas: bool = True, compress_mu: bool = False,
+                compress_z: bool = False,
+                staleness: Optional[int] = None) -> StepBundle:
+    """Build the full :class:`StepBundle` (step + carry protocol) for `backend`.
+
+    This is what the scan driver composes: ``init_carry`` (warm-up) before
+    the scan, ``step`` inside it, ``finalize`` after. For plain backends the
+    init/finalize halves are identities and the carry is the ``SoddaState``
+    itself.
+    """
     try:
         factory = _REGISTRY[backend]
     except KeyError:
@@ -199,8 +301,23 @@ def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
             f"unknown backend {backend!r}; available: {available_backends()}"
         ) from None
     opts = EngineOptions(mesh=mesh, gather_deltas=gather_deltas,
-                         compress_mu=compress_mu, compress_z=compress_z)
-    return factory(cfg, opts)
+                         compress_mu=compress_mu, compress_z=compress_z,
+                         staleness=staleness)
+    return _as_bundle(factory(cfg, opts))
+
+
+def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
+              gather_deltas: bool = True, compress_mu: bool = False,
+              compress_z: bool = False, staleness: Optional[int] = None) -> StepFn:
+    """Build a SODDA step ``(carry, X, y) -> carry`` for `backend`.
+
+    For plain backends the carry is the ``SoddaState``; for extended-carry
+    backends (``async``) the step maps the backend's own carry type — use
+    :func:`make_bundle` to obtain its ``init_carry``/``finalize`` halves.
+    """
+    return make_bundle(cfg, backend, mesh=mesh, gather_deltas=gather_deltas,
+                       compress_mu=compress_mu, compress_z=compress_z,
+                       staleness=staleness).step
 
 
 def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None):

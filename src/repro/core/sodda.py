@@ -18,8 +18,9 @@ from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 from repro.core.partition import IterationSample, sample_iteration
 
-__all__ = ["SoddaState", "init_state", "sodda_step", "run", "snapshot_gradient",
-           "inner_loop", "iteration_flops"]
+__all__ = ["SoddaState", "AsyncSoddaState", "init_state", "init_async_state",
+           "sodda_step", "sodda_step_async", "consume_update", "run",
+           "snapshot_gradient", "inner_loop", "iteration_flops"]
 
 
 class SoddaState(NamedTuple):
@@ -28,13 +29,36 @@ class SoddaState(NamedTuple):
     key: jnp.ndarray  # base PRNG key (folded with t each iteration)
 
 
+class AsyncSoddaState(NamedTuple):
+    """Extended scan carry for the stale-by-one ``async`` engine backend.
+
+    The plain :class:`SoddaState` fields plus the double-buffered exchange
+    vector: ``mu`` holds the snapshot-gradient exchange *issued* during
+    outer iteration t-1 (at w^{t-1} under the t-1 sample). Iteration t's
+    inner loop consumes it while issuing the iteration-t exchange into the
+    next carry, so the exchange has no data dependence on the compute it
+    overlaps with.
+    """
+
+    w: jnp.ndarray  # (M,) current iterate
+    t: jnp.ndarray  # int32, 1-based outer iteration
+    key: jnp.ndarray  # base PRNG key
+    mu: jnp.ndarray  # (M,) exchange buffer issued one iteration earlier
+
+    def sync_state(self) -> "SoddaState":
+        """Drop the exchange buffer (the driver's finalize half)."""
+        return SoddaState(w=self.w, t=self.t, key=self.key)
+
+
 def init_state(key, M: int) -> SoddaState:
     return SoddaState(w=jnp.zeros((M,), jnp.float32), t=jnp.array(1, jnp.int32), key=key)
 
 
 # ---------------------------------------------------------------------------
-# Step 8: stochastic snapshot gradient
+# Step 8: stochastic snapshot gradient — the *issue* half of the exchange
 #   mu^t = (1/d^t) sum_{j in D^t} bar_grad_{w_{C^t}} f_j(x_j^{B^t} w_{B^t})
+# On a mesh this is the psum over 'data' a synchronous step blocks on; the
+# async backend issues it one iteration ahead (see sodda_step_async).
 # ---------------------------------------------------------------------------
 def snapshot_gradient(loss: str, X, y, w, sample: IterationSample, d_count: int):
     zb = X @ (w * sample.mask_b)  # inner products restricted to B^t
@@ -72,21 +96,42 @@ def _counts(cfg: SoddaConfig):
     return b, c, d_local
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
-def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = False):
-    P, Q, n, M, L = cfg.P, cfg.Q, cfg.n, cfg.M, cfg.L
-    m, mt = cfg.m, cfg.m_tilde
-    b_count, c_count, d_local = _counts(cfg)
-    gamma = cfg.lr0 / (1.0 + jnp.sqrt(jnp.maximum(state.t - 1, 0).astype(jnp.float32))) \
+def _gamma(cfg: SoddaConfig, t):
+    return cfg.lr0 / (1.0 + jnp.sqrt(jnp.maximum(t - 1, 0).astype(jnp.float32))) \
         if cfg.constant_lr <= 0 else jnp.float32(cfg.constant_lr)
 
-    smp = sample_iteration(state.key, state.t, P, Q, n, M, L, b_count, c_count, d_local)
-    mu = snapshot_gradient(cfg.loss, X, y, state.w, smp, P * d_local)
+
+def _issue(cfg: SoddaConfig, X, y, w, t, key):
+    """The issue half of iteration t: draw the sample, compute the exchange.
+
+    One definition shared by the synchronous step, the async step, and the
+    async warm-up — the 'first async iteration is effectively synchronous'
+    invariant depends on all three issuing identically.
+    """
+    b_count, c_count, d_local = _counts(cfg)
+    smp = sample_iteration(key, t, cfg.P, cfg.Q, cfg.n, cfg.M, cfg.L,
+                           b_count, c_count, d_local)
+    mu = snapshot_gradient(cfg.loss, X, y, w, smp, cfg.P * d_local)
+    return smp, mu
+
+
+def consume_update(X, y, w, mu, smp: IterationSample, gamma,
+                   cfg: SoddaConfig, use_kernel: bool = False):
+    """Steps 10-19 — the *consume* half of an outer iteration.
+
+    Gathers the per-(p, q) working sets for the iteration's sample, runs the
+    L-step inner loops against the given exchange vector ``mu`` (fresh in
+    the synchronous step, one iteration stale in the async backend), and
+    concatenates the updated sub-blocks into the new iterate. Fully local:
+    on a mesh nothing here needs a collective except the final concatenate.
+    """
+    P, Q, n, M, L = cfg.P, cfg.Q, cfg.n, cfg.M, cfg.L
+    mt = cfg.m_tilde
 
     # gather per-(p,q) working sets ----------------------------------------
     Xb = X.reshape(P, n, Q * P, mt).transpose(0, 2, 1, 3)  # (P, QP, n, mt)
     yb = y.reshape(P, n)
-    wb = state.w.reshape(Q, P, mt)
+    wb = w.reshape(Q, P, mt)
     mub = mu.reshape(Q, P, mt)
 
     pq_p, pq_q = jnp.meshgrid(jnp.arange(P), jnp.arange(Q), indexing="ij")
@@ -115,7 +160,52 @@ def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = Fal
     q_idx = jnp.repeat(jnp.arange(Q), P)
     k_idx = smp.pi.reshape(-1)
     new_wb = wb.at[q_idx, k_idx].set(wL.transpose(1, 0, 2).reshape(Q * P, mt))
-    return SoddaState(w=new_wb.reshape(M), t=state.t + 1, key=state.key)
+    return new_wb.reshape(M)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = False):
+    gamma = _gamma(cfg, state.t)
+    smp, mu = _issue(cfg, X, y, state.w, state.t, state.key)
+    w_new = consume_update(X, y, state.w, mu, smp, gamma, cfg, use_kernel)
+    return SoddaState(w=w_new, t=state.t + 1, key=state.key)
+
+
+# ---------------------------------------------------------------------------
+# Stale-by-one outer iteration: the 'async' engine backend. The exchange is
+# double-buffered in the scan carry — iteration t consumes the buffer issued
+# at t-1 and issues its own for t+1, so the issue half (on a mesh: the
+# snapshot-gradient psum) has no consumer in its own iteration and overlaps
+# the inner-loop compute instead of blocking it.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cfg", "staleness"))
+def sodda_step_async(carry: AsyncSoddaState, X, y, cfg: SoddaConfig,
+                     staleness: int = 1):
+    """One stale-by-one outer iteration on the extended carry.
+
+    Issue half: compute this iteration's snapshot-gradient exchange from the
+    current iterate. Consume half: run the inner loops against ``carry.mu``,
+    the buffer issued one iteration earlier. ``staleness=0`` consumes the
+    just-issued buffer instead — arithmetically the synchronous
+    :func:`sodda_step`, the exact-parity anchor in the conformance suite.
+    """
+    gamma = _gamma(cfg, carry.t)
+    smp, mu_issued = _issue(cfg, X, y, carry.w, carry.t, carry.key)
+    mu_consumed = carry.mu if staleness else mu_issued
+    w_new = consume_update(X, y, carry.w, mu_consumed, smp, gamma, cfg)
+    return AsyncSoddaState(w=w_new, t=carry.t + 1, key=carry.key, mu=mu_issued)
+
+
+def init_async_state(state: SoddaState, X, y, cfg: SoddaConfig) -> AsyncSoddaState:
+    """Warm-up (the driver's carry-init half): issue the exchange for
+    iteration ``state.t`` so the first consume sees a valid buffer.
+
+    Because the iterate has not moved yet, the first async iteration is
+    effectively synchronous (it consumes exactly the buffer it would have
+    computed itself); staleness begins at the second iteration.
+    """
+    _, mu = _issue(cfg, X, y, state.w, state.t, state.key)
+    return AsyncSoddaState(w=state.w, t=state.t, key=state.key, mu=mu)
 
 
 def run(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1,

@@ -20,7 +20,8 @@ from repro.testing.fixtures import (CONFORMANCE_ITERS, make_problem,
 from repro.testing.invariants import (assert_samples_equal,
                                       check_iteration_sample)
 from repro.testing.tolerances import (BITWISE, F32_REDUCTION, QUANTIZED,
-                                      TolerancePolicy, assert_objectives_close,
+                                      STALENESS, TolerancePolicy,
+                                      assert_objectives_close,
                                       assert_trajectories_close)
 
 __all__ = [
@@ -39,6 +40,7 @@ __all__ = [
     "BITWISE",
     "F32_REDUCTION",
     "QUANTIZED",
+    "STALENESS",
     "TolerancePolicy",
     "assert_objectives_close",
     "assert_trajectories_close",

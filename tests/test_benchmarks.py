@@ -40,6 +40,42 @@ def test_t_returns_mean_us_per_call():
 
 
 # ---------------------------------------------------------------------------
+# Driver-bench backend resolution: every registered backend joins (mesh ones
+# only when the device grid exists), and a backend that fails to lower on
+# the current platform degrades to a WARN row instead of aborting the bench.
+# ---------------------------------------------------------------------------
+def test_resolve_driver_backends_covers_registry():
+    from repro.core import engine
+    from repro.testing import small_fixture_config
+    backends, have_mesh = bench_run._resolve_driver_backends(
+        small_fixture_config())
+    assert backends[0] == "reference"
+    assert "async" in backends
+    assert set(backends) <= set(engine.available_backends())
+    if have_mesh:  # the test session forces 12 devices, so the grid exists
+        assert "shard_map" in backends
+
+
+def test_bench_driver_warns_not_crashes_on_lowering_failure(
+        monkeypatch, tmp_path, capsys):
+    from repro.core import engine
+
+    def boom(cfg, opts):
+        raise RuntimeError("synthetic lowering failure")
+
+    monkeypatch.setitem(engine._REGISTRY, "zzz-broken", boom)
+    monkeypatch.setattr(bench_run, "_resolve_driver_backends",
+                        lambda cfg: (["reference", "zzz-broken"], False))
+    payload = bench_run.bench_driver(iters=2, reps=1,
+                                     out_path=str(tmp_path / "b.json"))
+    out = capsys.readouterr().out
+    assert "driver_backends_resolved" in out  # the resolved list is printed
+    assert "WARN" in out and "zzz-broken" in out
+    assert "zzz-broken" not in payload["backends"]
+    assert "reference" in payload["backends"]  # later cells still ran
+
+
+# ---------------------------------------------------------------------------
 # BENCH_sodda.json schema (bench_sodda/v1)
 # ---------------------------------------------------------------------------
 def _valid_payload():
@@ -98,9 +134,10 @@ def test_bench_driver_output_validates(tmp_path):
     wall-clock over every backend (reps>1 to ride out CI runner noise;
     the measured margin is ~10x against the 3x floor)."""
     out = tmp_path / "BENCH_sodda.json"
-    # bench defaults (iters=60): fewer iterations under-amortize the scan
-    # run's fixed dispatch cost and understate the per-iteration speedup
-    payload = bench_run.bench_driver(reps=2, out_path=str(out))
+    # iters=60: the 3x floor was calibrated in this regime (PR 2). The bench
+    # default is higher to amortize fixed dispatch cost across all cells,
+    # which changes the loop-vs-scan ratio this floor was tuned against.
+    payload = bench_run.bench_driver(iters=60, reps=2, out_path=str(out))
     validate_bench.validate(payload)
     assert out.exists()
     ref = payload["backends"]["reference"]

@@ -17,7 +17,7 @@ import pytest
 
 from repro.core import driver, engine, losses
 from repro.testing import (BITWISE, CONFORMANCE_ITERS, F32_REDUCTION,
-                           QUANTIZED, assert_objectives_close,
+                           QUANTIZED, STALENESS, assert_objectives_close,
                            assert_trajectories_close, make_problem,
                            small_fixture_config, sodda_test_mesh)
 
@@ -134,11 +134,85 @@ def test_reference_is_bitwise_deterministic(problem):
 
 
 # ---------------------------------------------------------------------------
+# Async (stale-by-one) backend: the algorithm legitimately diverges from the
+# synchronous trajectory, so its cells use the relaxed STALENESS policy —
+# convergence to the reference's optimum neighbourhood over a longer run —
+# plus one exact-parity anchor at staleness=0, where the schedule degenerates
+# to the synchronous one and the BITWISE contract must hold.
+# ---------------------------------------------------------------------------
+ASYNC_ITERS = 30  # stale-by-one needs room to converge back to the optimum
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("lr", LRS)
+def test_async_converges_to_reference_optimum(loss, lr, problem):
+    cfg = _cfg(loss, lr)
+    X, y = problem
+    key = jax.random.PRNGKey(1)
+    _, h_ref = driver.run(key, X, y, cfg, ASYNC_ITERS, "reference",
+                          record_every=ASYNC_ITERS)
+    _, h_async = driver.run(key, X, y, cfg, ASYNC_ITERS, "async",
+                            record_every=ASYNC_ITERS)
+    ctx = f"async/{loss}/{lr}"
+    assert_objectives_close(h_ref[-1][1], h_async[-1][1], STALENESS, ctx)
+    assert h_async[-1][1] < h_async[0][1], (ctx, h_async)  # still a descent
+
+
+def test_async_staleness_zero_is_exact_parity(problem, reference):
+    """staleness=0 consumes the buffer it just issued — arithmetically the
+    synchronous step, so the BITWISE contract holds iterate-by-iterate."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    ref_ws, _, _ = reference("hinge", "diminishing")
+    bundle = engine.make_bundle(cfg, "async", staleness=0)
+    carry = bundle.init_carry(engine.init_state(jax.random.PRNGKey(1), cfg.M),
+                              X, y)
+    ws = [np.asarray(carry.w)]
+    for _ in range(CONFORMANCE_ITERS):
+        carry = bundle.step(carry, X, y)
+        ws.append(np.asarray(carry.w))
+    assert_trajectories_close(ref_ws, ws, BITWISE, "async/staleness=0")
+    final = bundle.finalize(carry)
+    assert not hasattr(final, "mu")  # finalize strips the exchange buffer
+    assert int(final.t) == CONFORMANCE_ITERS + 1
+
+
+def test_async_backend_option_validation():
+    cfg = _cfg("hinge", "diminishing")
+    with pytest.raises(ValueError, match="staleness must be 0"):
+        engine.make_bundle(cfg, "async", staleness=2)
+    with pytest.raises(ValueError, match="synchronous"):
+        engine.make_step(cfg, "reference", staleness=1)
+    with pytest.raises(ValueError, match="synchronous"):
+        engine.make_step(cfg, "shard_map", staleness=0,
+                         mesh=sodda_test_mesh(small_fixture_config()))
+    with pytest.raises(ValueError, match="no collectives"):
+        engine.make_bundle(cfg, "async", compress_mu=True)
+    with pytest.raises(ValueError, match="takes no mesh"):
+        engine.make_bundle(cfg, "async",
+                           mesh=sodda_test_mesh(small_fixture_config()))
+
+
+def test_plain_backends_wrap_into_trivial_bundles(problem):
+    """make_bundle on a plain backend: identity init/finalize around the
+    same step that make_step returns."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    bundle = engine.make_bundle(cfg, "reference")
+    state = engine.init_state(jax.random.PRNGKey(4), cfg.M)
+    assert bundle.init_carry(state, X, y) is state
+    assert bundle.finalize(state) is state
+
+
+# ---------------------------------------------------------------------------
 # Scan-compiled driver parity: for every backend, the fused device program
 # (repro.core.driver) must reproduce the legacy per-iteration Python loop's
 # (t, F) history from the same seed, under the existing tolerance policies.
+# The async backend is included: it is nondeterministic relative to the
+# *reference*, but scan-vs-loop for the SAME backend is the same algorithm.
 # ---------------------------------------------------------------------------
-DRIVER_BACKENDS = engine.BACKENDS + engine.BASELINE_BACKENDS
+DRIVER_BACKENDS = (engine.BACKENDS + engine.BASELINE_BACKENDS
+                   + engine.ASYNC_BACKENDS)
 
 
 def _driver_kwargs(backend, request):
@@ -180,6 +254,24 @@ def test_driver_validates_arguments():
         driver.record_ticks(-1, 1)
     with pytest.raises(ValueError, match="unknown backend"):
         driver.make_run(cfg, 2, "mpi")
+
+
+@pytest.mark.parametrize("backend", ["reference", "async"])
+def test_driver_donates_state_buffers(backend, problem):
+    """The compiled run consumes (donates) its state argument — including
+    through the extended-carry path, where init_carry aliases the donated
+    buffers into the warm-up exchange. Regression guard: if the carry
+    plumbing ever copies the state instead of threading it, donation
+    silently stops and the iterate round-trips per run again."""
+    from repro.core.sodda import init_state
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    compiled = driver.make_run(cfg, 2, backend)
+    state = init_state(jax.random.PRNGKey(11), cfg.M)
+    compiled(state, X, y)
+    assert state.w.is_deleted(), f"{backend}: state.w not donated"
+    with pytest.raises(RuntimeError):
+        jnp.asarray(state.w) + 0  # donated buffers must not be reusable
 
 
 def test_driver_does_not_delete_caller_key(problem):

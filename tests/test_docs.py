@@ -1,0 +1,69 @@
+"""The docs link/anchor checker (tools/check_docs.py) as a tier-1 gate, so
+dangling references to renamed modules/files/headings fail locally before
+the CI docs job sees them."""
+import importlib
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+check_docs = importlib.import_module("tools.check_docs")
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_repo_docs_have_no_dangling_references():
+    errors = check_docs.check_tree(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_docs_pages_exist_and_are_linked_from_readme():
+    for page in ("architecture.md", "backends.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", page)), page
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    assert "docs/architecture.md" in readme
+    assert "docs/backends.md" in readme
+
+
+def test_checker_slug_rules():
+    s = check_docs.github_slug
+    assert s("The carry protocol") == "the-carry-protocol"
+    assert s("Engine API (`repro.core.engine`)") == "engine-api-reprocoreengine"
+    assert s("## nested not stripped") != ""
+
+
+def test_checker_flags_dangling_references(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "[ok](docs/page.md#real-heading) [bad](docs/missing.md)\n"
+        "[bad-anchor](docs/page.md#no-such-heading)\n"
+        "`repro.core.enginex` and `src/repro/core/nope.py`\n")
+    (docs / "page.md").write_text("# Real heading\n")
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    errors = check_docs.check_tree(str(tmp_path))
+    joined = "\n".join(errors)
+    assert "docs/missing.md" in joined
+    assert "no-such-heading" in joined
+    assert "repro.core.enginex" in joined
+    assert "src/repro/core/nope.py" in joined
+    assert len(errors) == 4, errors
+
+
+def test_checker_accepts_valid_module_and_path_refs(tmp_path):
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core" / "engine.py").write_text("")
+    (tmp_path / "README.md").write_text(
+        "`repro.core.engine` `repro.core.engine.make_step` "
+        "`src/repro/core/engine.py` [x](https://example.com)\n")
+    assert check_docs.check_tree(str(tmp_path)) == []
+
+
+def test_checker_cli_exit_status(tmp_path, capsys):
+    (tmp_path / "README.md").write_text("[bad](gone.md)\n")
+    assert check_docs.main(["--root", str(tmp_path)]) == 1
+    (tmp_path / "README.md").write_text("clean\n")
+    assert check_docs.main(["--root", str(tmp_path)]) == 0

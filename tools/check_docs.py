@@ -1,0 +1,150 @@
+"""Docs link/anchor checker: fails CI on dangling references.
+
+Scans README.md and docs/*.md for three reference classes and verifies each
+against the working tree, so renames (modules, files, headings) cannot leave
+silently-broken documentation behind:
+
+  * relative markdown links ``[text](path)`` and ``[text](path#anchor)`` —
+    the target file must exist, and the anchor must match a heading in it
+    (GitHub slug rules: lowercase, punctuation stripped, spaces to hyphens);
+  * backticked repo paths like ``src/repro/core/driver.py`` — the file must
+    exist relative to the repo root;
+  * backticked dotted module references like ``repro.core.driver`` (or
+    ``repro.core.driver.make_run``) — some prefix of at least two components
+    must resolve to a module or package under ``src/``.
+
+Exit status 0 when clean, 1 with one line per dangling reference:
+
+    python tools/check_docs.py            # from the repo root
+    python tools/check_docs.py --root .   # explicit root
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+DOC_GLOBS = ("README.md", "docs")  # files + directories scanned for *.md
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_RE = re.compile(r"`([^`\n]+)`")
+_PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|json|yml|yaml|txt|ini)$")
+_MODULE_RE = re.compile(r"^repro(?:\.\w+)+")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """The anchor GitHub generates for a heading."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def _md_files(root: str):
+    for entry in DOC_GLOBS:
+        path = os.path.join(root, entry)
+        if os.path.isfile(path):
+            yield path
+        elif os.path.isdir(path):
+            for name in sorted(os.listdir(path)):
+                if name.endswith(".md"):
+                    yield os.path.join(path, name)
+
+
+def _anchors(md_path: str):
+    with open(md_path) as f:
+        return {github_slug(h) for h in _HEADING_RE.findall(f.read())}
+
+
+def _module_resolves(root: str, dotted: str) -> bool:
+    """True if `dotted` names a module/attribute reachable under src/.
+
+    Walks the components: packages are descended, a module *file* accepts
+    the reference (anything after it is an attribute), and a component that
+    is neither is accepted only when the enclosing package's __init__.py
+    mentions it (a re-exported name). `repro.core.enginex` therefore fails
+    even though `repro.core` exists — the renamed-module case this checker
+    is for.
+    """
+    parts = dotted.split(".")
+    base = os.path.join(root, "src")
+    for i, comp in enumerate(parts):
+        sub = os.path.join(base, comp)
+        if os.path.isdir(sub):
+            base = sub
+            continue
+        if os.path.isfile(sub + ".py"):
+            return True  # module file; trailing components are attributes
+        init = os.path.join(base, "__init__.py")
+        if i > 0 and os.path.isfile(init):
+            with open(init) as f:
+                if re.search(rf"\b{re.escape(comp)}\b", f.read()):
+                    return True  # re-exported package attribute
+        return False
+    return True  # fully consumed: a package
+
+
+def check_file(md_path: str, root: str):
+    """All dangling references in one markdown file, as message strings."""
+    errors = []
+    rel = os.path.relpath(md_path, root)
+    with open(md_path) as f:
+        text = f.read()
+
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(md_path), path_part))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: dangling link target {target!r}")
+                continue
+        else:
+            dest = md_path  # intra-document anchor
+        if anchor:
+            if not dest.endswith(".md"):
+                continue  # anchors into non-markdown are not checkable
+            if anchor not in _anchors(dest):
+                errors.append(f"{rel}: dangling anchor {target!r}")
+
+    for code in _CODE_RE.findall(text):
+        token = code.strip()
+        if _PATH_RE.match(token) and "/" in token:
+            if not os.path.exists(os.path.join(root, token)):
+                errors.append(f"{rel}: backticked path `{token}` not found")
+        else:
+            m = _MODULE_RE.match(token)
+            # skip call expressions etc. — only bare dotted names are checked
+            if m and m.group(0) == token and not _module_resolves(root, token):
+                errors.append(f"{rel}: backticked module `{token}` "
+                              "does not resolve under src/")
+    return errors
+
+
+def check_tree(root: str):
+    errors = []
+    for md in _md_files(root):
+        errors.extend(check_file(md, root))
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.root)
+    errors = check_tree(root)
+    for e in errors:
+        print(e)
+    n = len(list(_md_files(root)))
+    print(f"{'FAIL' if errors else 'OK'}: {n} markdown files checked, "
+          f"{len(errors)} dangling references")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
