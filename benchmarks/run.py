@@ -211,17 +211,20 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
 
 
 # benchmarked in this order when registered + runnable; backends registered
-# but absent here (e.g. from plugins) are appended at the end
+# but absent here (e.g. from plugins) are appended at the end. async-mesh
+# runs after the sync shard_map cell so its us/iter can be reported against
+# the synchronous mesh baseline it must beat.
 _DRIVER_BACKEND_ORDER = ("reference", "pallas", "radisa-avg", "async",
-                         "shard_map", "shard_map+pallas")
+                         "shard_map", "shard_map+pallas", "async-mesh")
 
 
 def _resolve_driver_backends(cfg):
     """Every registered backend runnable on this host, in bench order.
 
-    The distributed backends join only when the host has the device grid
-    (run under XLA_FLAGS=--xla_force_host_platform_device_count=12, as the
-    CI bench-smoke job does, to bench all of them).
+    The mesh backends (engine.MESH_BACKENDS: shard_map, shard_map+pallas,
+    async-mesh) join only when the host has the device grid (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=12, as the CI
+    bench-smoke job does, to bench all of them).
     """
     import jax as _jax
     from repro.core import engine
@@ -230,7 +233,7 @@ def _resolve_driver_backends(cfg):
     ordered += [b for b in registered if b not in ordered]
     have_mesh = _jax.local_device_count() >= cfg.P * cfg.Q
     return [b for b in ordered
-            if have_mesh or not b.startswith("shard_map")], have_mesh
+            if have_mesh or b not in engine.MESH_BACKENDS], have_mesh
 
 
 def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
@@ -239,6 +242,7 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
     # and fewer iterations under-amortize it, overstating us/iter for every
     # backend (the same pitfall the python-loop comparison documents)
     from repro.core import driver, engine, radisa, sodda
+    from repro.core.distributed import iteration_collective_bytes
     from repro.core.sodda import init_state
     from repro.testing import make_problem, small_fixture_config
 
@@ -261,11 +265,17 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
                "iters": iters, "reps": reps, "backends": {}}
 
     for backend in backends:
-        kw = {"mesh": mesh} if backend.startswith("shard_map") else {}
+        kw = {"mesh": mesh} if backend in engine.MESH_BACKENDS else {}
         try:
             compiled = driver.make_run(cfg, iters, backend, record_every=1,
                                        **kw)
-            fresh = lambda: init_state(jnp.array(key, copy=True), cfg.M)
+            # mesh-backend states are laid out in the program's output
+            # sharding so donation aliases (place_initial_state) — the
+            # timed dispatch then rewrites the iterate in place, as a
+            # production run would
+            fresh = lambda: driver.place_initial_state(
+                init_state(jnp.array(key, copy=True), cfg.M), cfg, backend,
+                mesh)
             # _t warms once then times reps; run_python_loop's step/objective
             # executables are lru-cached in the driver, so its warmup pass
             # compiles everything the timed passes reuse
@@ -295,6 +305,9 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
         fpi = flops_per_iter[backend]
         payload["backends"][backend] = {
             "flops_per_iter": fpi,
+            **({"collective_bytes_per_iter":
+                iteration_collective_bytes(cfg)}
+               if backend in engine.MESH_BACKENDS else {}),
             # the loop trajectory is F32-identical to the scan's (asserted
             # per backend by the driver parity tests), so it is recorded
             # once from the scan run instead of re-paying iters individual
@@ -310,6 +323,24 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
         row(f"driver_{backend}_scan", scan_us,
             f"loop_us={loop_us:.1f} speedup={loop_us/scan_us:.2f}x "
             f"final_loss={scan_hist[-1][1]:.4f}")
+
+    # the async-mesh acceptance cell: its us/iter against the *sync*
+    # shard_map baseline (same mesh, same collectives — only the schedule
+    # differs), plus the per-iteration wire volume both cells ship. On real
+    # interconnects the stale schedule buys up to the mu-psum latency per
+    # iteration; on the fake single-host device grid the collectives are
+    # memcpys, so the ratio mostly proves the async cell pays no overhead.
+    sm, am = payload["backends"].get("shard_map"), \
+        payload["backends"].get("async-mesh")
+    if sm and am:
+        ratio = am["scan_driver"]["us_per_iter"] / \
+            sm["scan_driver"]["us_per_iter"]
+        am["vs_shard_map_us_ratio"] = ratio
+        bytes_total = am["collective_bytes_per_iter"]["total"]
+        row("driver_async_mesh_vs_shard_map",
+            am["scan_driver"]["us_per_iter"],
+            f"sync_us={sm['scan_driver']['us_per_iter']:.1f} "
+            f"ratio={ratio:.2f}x collective_bytes/iter={bytes_total:.0f}")
 
     out_path = out_path or BENCH_JSON
     os.makedirs(os.path.dirname(out_path), exist_ok=True)

@@ -1,11 +1,15 @@
 """Schema validation for the machine-readable driver benchmark output.
 
 ``benchmarks/run.py --only driver`` writes ``results/BENCH_sodda.json``
-(schema ``bench_sodda/v1``); the CI bench-smoke job validates the file with
+(schema ``bench_sodda/v1``, documented field-by-field in
+``docs/benchmarks.md``); the CI bench-smoke job validates the file with
 this module before uploading it as an artifact, so downstream tooling can
 rely on the shape without re-deriving it from the writer.
 
     PYTHONPATH=src python -m benchmarks.validate_bench results/BENCH_sodda.json
+    # fail unless specific cells made it into the artifact (CI acceptance):
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        results/BENCH_sodda.json --require-backend async-mesh
 """
 from __future__ import annotations
 
@@ -82,19 +86,49 @@ def validate(payload: dict) -> dict:
         sp = b.get("speedup")
         if not isinstance(sp, (int, float)) or sp <= 0:
             _fail(f"{ctx}.speedup must be positive, got {sp!r}")
+        li = b["python_loop"].get("loop_iters")
+        if li is not None and (not isinstance(li, int) or not
+                               0 < li <= iters):
+            _fail(f"{ctx}.python_loop.loop_iters must be an int in "
+                  f"(0, iters], got {li!r}")
+        cb = b.get("collective_bytes_per_iter")
+        if cb is not None:
+            if not isinstance(cb, dict) or set(cb) != {"z", "mu", "delta",
+                                                       "total"}:
+                _fail(f"{ctx}.collective_bytes_per_iter must have exactly "
+                      f"the z/mu/delta/total keys, got {cb!r}")
+            if any(not isinstance(v, (int, float)) or v < 0
+                   for v in cb.values()):
+                _fail(f"{ctx}.collective_bytes_per_iter values must be "
+                      f"non-negative numbers, got {cb!r}")
+        vr = b.get("vs_shard_map_us_ratio")
+        if vr is not None and (not isinstance(vr, (int, float)) or vr <= 0):
+            _fail(f"{ctx}.vs_shard_map_us_ratio must be positive, got {vr!r}")
     return payload
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
+    paths, required = [], []
+    it = iter(argv)
+    for a in it:
+        if a == "--require-backend":
+            required.append(next(it, None))
+        else:
+            paths.append(a)
+    if len(paths) != 1 or None in required:
         print(__doc__)
         return 2
-    with open(argv[0]) as f:
+    with open(paths[0]) as f:
         payload = validate(json.load(f))
+    missing = [b for b in required if b not in payload["backends"]]
+    if missing:
+        print(f"FAIL {paths[0]}: required backend cells missing: {missing} "
+              f"(have {sorted(payload['backends'])})")
+        return 1
     n = len(payload["backends"])
     ref = payload["backends"].get("reference", {})
-    print(f"OK {argv[0]}: schema={payload['schema']} backends={n} "
+    print(f"OK {paths[0]}: schema={payload['schema']} backends={n} "
           f"reference_speedup={ref.get('speedup', float('nan')):.2f}x")
     return 0
 

@@ -27,10 +27,12 @@ from repro.compat import shard_map
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 from repro.core.partition import _exact_count_mask
-from repro.core.sodda import SoddaState, _counts, _gamma, inner_loop
+from repro.core.sodda import (AsyncSoddaState, SoddaState, _counts, _gamma,
+                              inner_loop)
 
-__all__ = ["make_distributed_step", "make_local_halves",
-           "distributed_objective"]
+__all__ = ["make_distributed_step", "make_distributed_async_step",
+           "make_local_halves", "distributed_objective",
+           "iteration_collective_bytes"]
 
 
 def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
@@ -46,12 +48,14 @@ def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
     sub-block assembly collective.
 
     The synchronous :func:`make_distributed_step` composes them back to back
-    (consume blocks on issue); a stale-by-one mesh step would instead feed
-    ``consume_local`` the previous iteration's ``mu_q`` from an extended
+    (consume blocks on issue); the stale-by-one
+    :func:`make_distributed_async_step` instead feeds ``consume_local`` the
+    previous iteration's ``mu_q`` from the extended ``AsyncSoddaState``
     carry, exactly as the single-host ``async`` backend does with
     ``repro.core.sodda.sodda_step_async``. Both halves re-derive their
     randomness from ``fold_in(key, t)``, so they need no shared state beyond
-    ``(t, key)``.
+    ``(t, key)`` — which is what allows them to be split across iterations
+    at all.
     """
     n, m, mt, L, M = cfg.n, cfg.m, cfg.m_tilde, cfg.L, cfg.M
     b_count, c_count, d_local = _counts(cfg)
@@ -183,6 +187,131 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
         return SoddaState(w=w_new, t=state.t + 1, key=state.key)
 
     return step
+
+
+def make_distributed_async_step(mesh, cfg: SoddaConfig, staleness: int = 1,
+                                gather_deltas: bool = True,
+                                compress_mu: bool = False,
+                                compress_z: bool = False,
+                                use_kernel: bool = False):
+    """The ``async-mesh`` engine backend: a stale-by-one shard_map step.
+
+    Returns the ``(step, init_carry, finalize)`` triple of the engine's
+    ``StepBundle`` protocol. The scan carry is ``AsyncSoddaState`` with the
+    exchange buffer ``mu`` laid out exactly like the iterate — global shape
+    ``(M,)``, sharded ``P('model')`` (each feature partition's m-block
+    resident on its mesh column, replicated across 'data' rows, which is the
+    replication the issuing psum produces).
+
+    Inside one shard_map body, iteration t *issues* its own exchange (the
+    psum over 'data' of the C-masked snapshot gradient) into the next carry
+    and *consumes* the buffer issued at t-1 from the current carry. The
+    issued collective therefore has no consumer in its own iteration: XLA is
+    free to overlap it with the fully-local inner loop it has no data
+    dependence on, instead of stalling every device on the wire — the
+    overlap the single-host ``async`` backend can only simulate in carry
+    dataflow is here expressed on the real device topology.
+
+    ``staleness=0`` consumes the just-issued buffer: the body is then
+    operation-for-operation the synchronous composition of
+    :func:`make_local_halves`, so it is held BITWISE to
+    :func:`make_distributed_step` (the conformance anchor). ``staleness=1``
+    runs the genuinely stale schedule and is held to the relaxed STALENESS
+    policy, like the single-host ``async`` backend.
+
+    The warm-up half maps only ``issue_local`` (its outputs are pure psums,
+    so its replication is statically inferable and the VMA check stays on —
+    unless the int8-compressed collectives, whose replication the checker
+    cannot see through, are selected); the composed step inherits the
+    all_gather + scatter assembly that already defeats the static checker in
+    :func:`make_distributed_step`, hence ``check_vma=False`` there.
+    """
+    if staleness not in (0, 1):
+        raise ValueError(
+            f"staleness must be 0 (synchronous parity) or 1 (stale-by-one), "
+            f"got {staleness!r}")
+    Pn, Qn = mesh.shape["data"], mesh.shape["model"]
+    assert (Pn, Qn) == (cfg.P, cfg.Q), (mesh.shape, cfg)
+    issue_local, consume_local = make_local_halves(
+        cfg, gather_deltas=gather_deltas, compress_mu=compress_mu,
+        compress_z=compress_z, use_kernel=use_kernel)
+
+    def step_local(X_loc, y_loc, w_loc, mu_loc, t, key):
+        mu_issued = issue_local(X_loc, y_loc, w_loc, t, key)
+        mu_consumed = mu_loc if staleness else mu_issued
+        w_new = consume_local(X_loc, y_loc, w_loc, mu_consumed, t, key)
+        return w_new, mu_issued
+
+    smapped = shard_map(
+        step_local,
+        mesh=mesh,
+        in_specs=(P("data", "model"), P("data"), P("model"), P("model"),
+                  P(), P()),
+        out_specs=(P("model"), P("model")),
+        # same assembly as make_distributed_step: replicated across 'data'
+        # in a way the static checker cannot infer
+        check_vma=False,
+    )
+
+    # jitted: the python-loop driver calls init_carry eagerly once per run,
+    # and an un-jitted shard_map dispatch executes op-by-op (three orders of
+    # magnitude slower on a fake multi-device host); inside the scan
+    # driver's compiled program the jit wrapper simply inlines
+    issue_smapped = jax.jit(shard_map(
+        issue_local,
+        mesh=mesh,
+        in_specs=(P("data", "model"), P("data"), P("model"), P(), P()),
+        out_specs=P("model"),
+        check_vma=False if (compress_mu or compress_z) else None,
+    ))
+
+    @jax.jit
+    def step(carry: AsyncSoddaState, X, y):
+        w_new, mu_new = smapped(X, y, carry.w, carry.mu, carry.t, carry.key)
+        return AsyncSoddaState(w=w_new, t=carry.t + 1, key=carry.key,
+                               mu=mu_new)
+
+    def init_carry(state: SoddaState, X, y) -> AsyncSoddaState:
+        # warm-up: issue the exchange for iteration state.t so the first
+        # consume sees a valid buffer. Traced into the driver's single
+        # compiled dispatch; the iterate has not moved, so the first
+        # iteration is effectively synchronous (staleness starts at t+1).
+        mu = issue_smapped(X, y, state.w, state.t, state.key)
+        return AsyncSoddaState(w=state.w, t=state.t, key=state.key, mu=mu)
+
+    def finalize(carry: AsyncSoddaState) -> SoddaState:
+        return carry.sync_state()
+
+    from repro.core.engine import StepBundle  # local: engine lazy-imports us
+    return StepBundle(step=step, init_carry=init_carry, finalize=finalize)
+
+
+def iteration_collective_bytes(cfg: SoddaConfig, gather_deltas: bool = True,
+                               compress_mu: bool = False,
+                               compress_z: bool = False) -> dict:
+    """Analytic per-device wire bytes of one outer iteration's collectives.
+
+    Ring-collective costs on the (data=P, model=Q) mesh (send volume per
+    device; f32 wires are 4 bytes, int8-compressed wires 1 byte + a scale
+    scalar per shard, which is dropped as negligible):
+
+      * ``z``     psum of the (n,)-sized partial inner products over 'model'
+                  — 2(Q-1)/Q · n per device
+      * ``mu``    psum of the (m,)-sized masked snapshot gradient over
+                  'data' — 2(P-1)/P · m per device
+      * ``delta`` sub-block assembly over 'data': all_gather of the m̃-sized
+                  updated blocks ((P-1)/P · m) or the zero-padded m-sized
+                  delta psum (2(P-1)/P · m)
+
+    The ``async-mesh`` backend moves exactly the same bytes as the sync
+    ``shard_map`` step — the point of stale-by-one is *when* the mu psum's
+    consumer runs (next iteration), not how much it ships.
+    """
+    P_, Q_, n, m = cfg.P, cfg.Q, cfg.n, cfg.m
+    z = 2.0 * (Q_ - 1) / Q_ * n * (1 if compress_z else 4)
+    mu = 2.0 * (P_ - 1) / P_ * m * (1 if compress_mu else 4)
+    delta = (1.0 if gather_deltas else 2.0) * (P_ - 1) / P_ * m * 4
+    return {"z": z, "mu": mu, "delta": delta, "total": z + mu + delta}
 
 
 def distributed_objective(mesh, cfg: SoddaConfig):

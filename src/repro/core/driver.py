@@ -41,6 +41,10 @@ Every carry exposes ``.w``, which is how the objective is recorded
 mid-scan. The ``state`` argument of the compiled run is donated — its
 buffers are consumed by the first use inside the program and must not be
 reused by the caller (regression-tested in ``tests/test_conformance.py``).
+On the mesh backends (``engine.MESH_BACKENDS``) donation only aliases when
+the initial state already carries the program's output sharding;
+:func:`run` places it there via :func:`place_initial_state`, and callers
+driving a :func:`make_run` executable by hand should do the same.
 
 :func:`run` keeps the exact ``(final_state, [(t, F(w^t))])`` contract of the
 legacy drivers (``engine.run`` / ``sodda.run`` / ``radisa.run_radisa_avg``
@@ -65,7 +69,8 @@ import numpy as np
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 
-__all__ = ["record_ticks", "make_run", "run", "run_python_loop"]
+__all__ = ["record_ticks", "make_run", "place_initial_state", "run",
+           "run_python_loop"]
 
 
 def record_ticks(iters: int, record_every: int) -> Tuple[int, ...]:
@@ -148,6 +153,34 @@ def make_run(cfg: SoddaConfig, iters: int, backend: str = "reference", *,
                        mesh, tuple(sorted(options.items())))
 
 
+def place_initial_state(state, cfg: SoddaConfig, backend: str, mesh=None):
+    """Lay the initial state out the way `backend`'s compiled run shards it.
+
+    The mesh backends produce their outputs sharded over the ('data',
+    'model') mesh (the iterate — and the async-mesh exchange buffer —
+    along 'model', the scalars replicated). Donation can only alias an
+    input buffer whose sharding matches the output it is rewritten into, so
+    a single-device initial state silently defeats ``donate_argnums`` on
+    those backends: XLA drops the alias and the iterate round-trips per
+    run. This helper device_puts the state into the matching layout;
+    single-host backends pass through untouched. :func:`run` applies it
+    automatically — call it yourself only when driving a
+    :func:`make_run` executable by hand (as the donation regression test
+    does).
+    """
+    from repro.core import engine
+
+    if backend not in engine.MESH_BACKENDS:
+        return state
+    mesh = mesh if mesh is not None else engine.make_mesh_for(cfg)
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    return type(state)(
+        w=jax.device_put(state.w, NamedSharding(mesh, P("model"))),
+        t=jax.device_put(state.t, NamedSharding(mesh, P())),
+        key=jax.device_put(state.key, NamedSharding(mesh, P())))
+
+
 def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
         *, record_every: int = 1, mesh=None, **options):
     """Run `iters` outer iterations of `backend` as one fused device program.
@@ -162,8 +195,12 @@ def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
     compiled = make_run(cfg, iters, backend, record_every=record_every,
                         mesh=mesh, **options)
     # copy the key: the state is donated, and donating an alias of the
-    # caller's key buffer would delete it out from under them
-    state, fs = compiled(init_state(jnp.array(key, copy=True), cfg.M), X, y)
+    # caller's key buffer would delete it out from under them. The mesh
+    # placement makes that donation real on the mesh backends (see
+    # place_initial_state).
+    state = place_initial_state(init_state(jnp.array(key, copy=True), cfg.M),
+                                cfg, backend, mesh)
+    state, fs = compiled(state, X, y)
     hist = [(t, float(f))
             for t, f in zip(record_ticks(iters, record_every), np.asarray(fs))]
     return state, hist

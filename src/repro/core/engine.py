@@ -18,13 +18,20 @@ Backends
                        exchange is double-buffered in an extended scan
                        carry, so iteration t consumes the buffer issued at
                        t-1 (``core.sodda.sodda_step_async``)
+``async-mesh``         the stale-by-one schedule lifted onto the device
+                       mesh: one shard_map body issues iteration t's psum
+                       exchange and consumes the t-1 buffer from the
+                       mesh-sharded carry, so the collective overlaps the
+                       inner loop on real device topology
+                       (``core.distributed.make_distributed_async_step``)
 
 Options orthogonal to the backend (``EngineOptions``): delta exchange
 strategy (``gather_deltas``), int8 wire compression of the two dominant
 collectives (``compress_z``, ``compress_mu``) — meaningful only for the
 distributed backends — and ``staleness`` (0 or 1), meaningful only for the
-``async`` backend. All are rejected with ``ValueError`` on backends they
-cannot affect, so a silent no-op can never masquerade as a measured
+stale-by-one backends (``async``/``async-mesh``; the synchronous mesh
+backends still reject it). All are rejected with ``ValueError`` on backends
+they cannot affect, so a silent no-op can never masquerade as a measured
 ablation.
 
 Every step function returned by :func:`make_step` has the uniform signature
@@ -51,6 +58,7 @@ __all__ = [
     "BACKENDS",
     "BASELINE_BACKENDS",
     "ASYNC_BACKENDS",
+    "MESH_BACKENDS",
     "EngineOptions",
     "StepBundle",
     "available_backends",
@@ -83,7 +91,7 @@ class EngineOptions:
     gather_deltas: bool = True
     compress_mu: bool = False
     compress_z: bool = False
-    staleness: Optional[int] = None  # async backend only; None = backend default
+    staleness: Optional[int] = None  # async/async-mesh only; None = default
 
     @property
     def distributed_kwargs(self):
@@ -108,7 +116,17 @@ class EngineOptions:
         if self.staleness is not None:
             raise ValueError(
                 f"backend {backend!r} exchanges synchronously; staleness is "
-                "only meaningful for the 'async' backend")
+                "only meaningful for the stale-by-one backends "
+                "('async', 'async-mesh')")
+
+    def resolve_staleness(self) -> int:
+        """The effective staleness of a stale-by-one backend (default 1)."""
+        staleness = 1 if self.staleness is None else int(self.staleness)
+        if staleness not in (0, 1):
+            raise ValueError(
+                f"staleness must be 0 (synchronous parity) or 1 "
+                f"(stale-by-one), got {self.staleness!r}")
+        return staleness
 
 
 StepFn = Callable[..., SoddaState]
@@ -257,11 +275,7 @@ def _async(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
     synchronous schedule — the exact-parity anchor of the conformance suite.
     """
     opts.require_no_wires("async")
-    staleness = 1 if opts.staleness is None else int(opts.staleness)
-    if staleness not in (0, 1):
-        raise ValueError(
-            f"staleness must be 0 (synchronous parity) or 1 (stale-by-one), "
-            f"got {opts.staleness!r}")
+    staleness = opts.resolve_staleness()
 
     def step(carry, X, y):
         return sodda.sodda_step_async(carry, X, y, cfg, staleness=staleness)
@@ -275,9 +289,30 @@ def _async(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
     return StepBundle(step=step, init_carry=init_carry, finalize=finalize)
 
 
+@register_backend("async-mesh")
+def _async_mesh(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
+    """Stale-by-one delta exchange as one shard_map body on the mesh.
+
+    The scan carry is ``AsyncSoddaState`` with the exchange buffer sharded
+    ``P('model')`` alongside the iterate; iteration t's shard_map body
+    consumes the psum issued at t-1 while issuing its own, so the collective
+    overlaps the fully-local inner loop on real device topology instead of
+    blocking it (see ``core.distributed.make_distributed_async_step``).
+    ``staleness=0`` degenerates to the synchronous ``shard_map`` schedule —
+    the BITWISE conformance anchor against that backend.
+    """
+    from repro.core.distributed import make_distributed_async_step
+    return make_distributed_async_step(
+        _resolve_mesh(cfg, opts), cfg, staleness=opts.resolve_staleness(),
+        **opts.distributed_kwargs)
+
+
 BACKENDS = ("reference", "pallas", "shard_map", "shard_map+pallas")
 BASELINE_BACKENDS = ("radisa-avg",)
-ASYNC_BACKENDS = ("async",)
+ASYNC_BACKENDS = ("async", "async-mesh")
+# backends that execute on a ('data', 'model') device mesh and accept/require
+# the mesh option (auto-built from local devices when omitted)
+MESH_BACKENDS = ("shard_map", "shard_map+pallas", "async-mesh")
 
 
 # ---------------------------------------------------------------------------
@@ -329,7 +364,7 @@ def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None):
     if backend not in _REGISTRY:
         raise ValueError(
             f"unknown backend {backend!r}; available: {available_backends()}")
-    if backend in ("shard_map", "shard_map+pallas"):
+    if backend in MESH_BACKENDS:
         from repro.core.distributed import distributed_objective
         return distributed_objective(
             _resolve_mesh(cfg, EngineOptions(mesh=mesh)), cfg)

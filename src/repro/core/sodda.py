@@ -30,7 +30,7 @@ class SoddaState(NamedTuple):
 
 
 class AsyncSoddaState(NamedTuple):
-    """Extended scan carry for the stale-by-one ``async`` engine backend.
+    """Extended scan carry for the stale-by-one engine backends.
 
     The plain :class:`SoddaState` fields plus the double-buffered exchange
     vector: ``mu`` holds the snapshot-gradient exchange *issued* during
@@ -38,6 +38,15 @@ class AsyncSoddaState(NamedTuple):
     inner loop consumes it while issuing the iteration-t exchange into the
     next carry, so the exchange has no data dependence on the compute it
     overlaps with.
+
+    Two backends thread this carry through the scan: the single-host
+    ``async`` backend (:func:`sodda_step_async`, ``mu`` a plain ``(M,)``
+    array) and the mesh ``async-mesh`` backend
+    (``repro.core.distributed.make_distributed_async_step``, same global
+    ``(M,)`` shape but sharded ``P('model')`` alongside the iterate — the
+    replication its issuing psum produces, so carrying it across iterations
+    moves no bytes). Both strip back to :class:`SoddaState` via
+    :meth:`sync_state` in the driver's finalize half.
     """
 
     w: jnp.ndarray  # (M,) current iterate

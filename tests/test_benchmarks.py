@@ -54,6 +54,11 @@ def test_resolve_driver_backends_covers_registry():
     assert set(backends) <= set(engine.available_backends())
     if have_mesh:  # the test session forces 12 devices, so the grid exists
         assert "shard_map" in backends
+        assert "async-mesh" in backends
+        # the vs-sync comparison cell needs the sync baseline benched first
+        assert backends.index("shard_map") < backends.index("async-mesh")
+    else:  # no device grid: every mesh backend must drop out, not WARN-fail
+        assert not set(backends) & set(engine.MESH_BACKENDS)
 
 
 def test_bench_driver_warns_not_crashes_on_lowering_failure(
@@ -118,12 +123,48 @@ def test_schema_accepts_valid_payload():
     (lambda p: p["backends"]["reference"]["scan_driver"]["trajectory"]
      .update(t=[0, 1, 5]), "iters"),
     (lambda p: p["backends"]["reference"].update(speedup=0), "speedup"),
+    (lambda p: p["backends"]["reference"]["python_loop"].update(
+        loop_iters=5), "loop_iters"),  # > iters
+    (lambda p: p["backends"]["reference"].update(
+        collective_bytes_per_iter={"z": 1.0}), "collective_bytes"),
+    (lambda p: p["backends"]["reference"].update(
+        collective_bytes_per_iter={"z": 1.0, "mu": -2.0, "delta": 0.0,
+                                   "total": 3.0}), "collective_bytes"),
+    (lambda p: p["backends"]["reference"].update(vs_shard_map_us_ratio=0),
+     "vs_shard_map_us_ratio"),
 ])
 def test_schema_rejects_violations(mutate, match):
     payload = _valid_payload()
     mutate(payload)
     with pytest.raises(validate_bench.BenchSchemaError, match=match):
         validate_bench.validate(payload)
+
+
+def test_schema_accepts_mesh_backend_fields():
+    """The optional mesh-cell fields (collective bytes, the async-mesh
+    vs-sync ratio, the loop timing regime) validate when well-formed."""
+    payload = _valid_payload()
+    payload["backends"]["reference"]["python_loop"]["loop_iters"] = 2
+    payload["backends"]["reference"]["collective_bytes_per_iter"] = {
+        "z": 128.0, "mu": 96.0, "delta": 48.0, "total": 272.0}
+    payload["backends"]["reference"]["vs_shard_map_us_ratio"] = 1.02
+    assert validate_bench.validate(payload)
+
+
+def test_validate_cli_require_backend(tmp_path, capsys):
+    """--require-backend: CI acceptance that the async-mesh cell actually
+    made it into the artifact (a host without the device grid would
+    silently drop it otherwise)."""
+    import json
+    path = tmp_path / "b.json"
+    path.write_text(json.dumps(_valid_payload()))
+    assert validate_bench.main([str(path)]) == 0
+    assert validate_bench.main(
+        [str(path), "--require-backend", "reference"]) == 0
+    assert validate_bench.main(
+        [str(path), "--require-backend", "async-mesh"]) == 1
+    assert "async-mesh" in capsys.readouterr().out
+    assert validate_bench.main([str(path), "--require-backend"]) == 2
 
 
 @pytest.mark.slow

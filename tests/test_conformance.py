@@ -23,7 +23,7 @@ from repro.testing import (BITWISE, CONFORMANCE_ITERS, F32_REDUCTION,
 
 LOSSES = tuple(losses.LOSSES)  # hinge, logistic, squared
 LRS = ("diminishing", "constant")
-_DISTRIBUTED = ("shard_map", "shard_map+pallas")
+_DISTRIBUTED = engine.MESH_BACKENDS  # backends whose cells need the mesh
 
 
 @functools.lru_cache(maxsize=None)
@@ -193,6 +193,83 @@ def test_async_backend_option_validation():
                            mesh=sodda_test_mesh(small_fixture_config()))
 
 
+# ---------------------------------------------------------------------------
+# async-mesh: the stale-by-one schedule realized as one shard_map body over
+# the mesh. Same policy structure as the single-host async backend —
+# STALENESS cells over the loss x lr grid, plus a BITWISE staleness=0
+# anchor, here against the *sync shard_map* backend: at staleness=0 the body
+# is operation-for-operation the synchronous composition of the halves.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("loss", LOSSES)
+@pytest.mark.parametrize("lr", LRS)
+def test_async_mesh_converges_to_reference_optimum(loss, lr, problem, mesh):
+    cfg = _cfg(loss, lr)
+    X, y = problem
+    key = jax.random.PRNGKey(1)
+    _, h_ref = driver.run(key, X, y, cfg, ASYNC_ITERS, "reference",
+                          record_every=ASYNC_ITERS)
+    _, h_am = driver.run(key, X, y, cfg, ASYNC_ITERS, "async-mesh",
+                         record_every=ASYNC_ITERS, mesh=mesh)
+    ctx = f"async-mesh/{loss}/{lr}"
+    assert_objectives_close(h_ref[-1][1], h_am[-1][1], STALENESS, ctx)
+    assert h_am[-1][1] < h_am[0][1], (ctx, h_am)  # still a descent
+
+
+def test_async_mesh_staleness_zero_is_bitwise_vs_shard_map(problem, mesh):
+    """staleness=0 consumes the buffer the body just issued — the same trace
+    as the synchronous shard_map step, so BITWISE holds iterate-by-iterate
+    (the conformance anchor demanded by the acceptance criteria)."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    sync_step = engine.make_step(cfg, "shard_map", mesh=mesh)
+    bundle = engine.make_bundle(cfg, "async-mesh", mesh=mesh, staleness=0)
+    state = engine.init_state(jax.random.PRNGKey(1), cfg.M)
+    carry = bundle.init_carry(state, X, y)
+    ws_sync, ws_am = [np.asarray(state.w)], [np.asarray(carry.w)]
+    for _ in range(CONFORMANCE_ITERS):
+        state = sync_step(state, X, y)
+        carry = bundle.step(carry, X, y)
+        ws_sync.append(np.asarray(state.w))
+        ws_am.append(np.asarray(carry.w))
+    assert_trajectories_close(ws_sync, ws_am, BITWISE,
+                              "async-mesh/staleness=0 vs shard_map")
+    final = bundle.finalize(carry)
+    assert not hasattr(final, "mu")  # finalize strips the exchange buffer
+    assert int(final.t) == CONFORMANCE_ITERS + 1
+
+
+def test_async_mesh_matches_single_host_async(problem, mesh):
+    """The mesh realization of stale-by-one is the same algorithm as the
+    single-host async backend — same staleness schedule, same randomness —
+    so their trajectories agree to f32 reduction order (the collectives
+    reduce in a different order than the vmap'd einsums)."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    key = jax.random.PRNGKey(1)
+    s_host, h_host = driver.run(key, X, y, cfg, ASYNC_ITERS, "async",
+                                record_every=ASYNC_ITERS)
+    s_mesh, h_mesh = driver.run(key, X, y, cfg, ASYNC_ITERS, "async-mesh",
+                                record_every=ASYNC_ITERS, mesh=mesh)
+    assert_trajectories_close([np.asarray(s_host.w)], [np.asarray(s_mesh.w)],
+                              F32_REDUCTION, "async-mesh-vs-async/final-w")
+    for (t, f_h), (_, f_m) in zip(h_host, h_mesh):
+        assert_objectives_close(f_h, f_m, F32_REDUCTION,
+                                f"async-mesh-vs-async/t={t}")
+
+
+def test_async_mesh_option_validation(mesh):
+    cfg = _cfg("hinge", "diminishing")
+    with pytest.raises(ValueError, match="staleness must be 0"):
+        engine.make_bundle(cfg, "async-mesh", mesh=mesh, staleness=2)
+    # a mesh backend: wire options are consumed, not rejected
+    bundle = engine.make_bundle(cfg, "async-mesh", mesh=mesh,
+                                gather_deltas=False)
+    assert bundle.init_carry is not None
+    # the sync mesh backends still reject the staleness knob
+    with pytest.raises(ValueError, match="synchronous"):
+        engine.make_step(cfg, "shard_map+pallas", staleness=1, mesh=mesh)
+
+
 def test_plain_backends_wrap_into_trivial_bundles(problem):
     """make_bundle on a plain backend: identity init/finalize around the
     same step that make_step returns."""
@@ -256,18 +333,25 @@ def test_driver_validates_arguments():
         driver.make_run(cfg, 2, "mpi")
 
 
-@pytest.mark.parametrize("backend", ["reference", "async"])
-def test_driver_donates_state_buffers(backend, problem):
+@pytest.mark.parametrize("backend", ["reference", "async", "shard_map",
+                                     "async-mesh"])
+def test_driver_donates_state_buffers(backend, problem, request):
     """The compiled run consumes (donates) its state argument — including
-    through the extended-carry path, where init_carry aliases the donated
-    buffers into the warm-up exchange. Regression guard: if the carry
-    plumbing ever copies the state instead of threading it, donation
-    silently stops and the iterate round-trips per run again."""
+    through the extended-carry paths, where init_carry aliases the donated
+    buffers into the warm-up exchange. On the mesh backends donation only
+    aliases when the initial state already carries the program's output
+    sharding (driver.place_initial_state; a single-device state silently
+    defeats donate_argnums). Regression guard: if the carry plumbing ever
+    copies the state instead of threading it, donation silently stops and
+    the iterate round-trips per run again."""
     from repro.core.sodda import init_state
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
-    compiled = driver.make_run(cfg, 2, backend)
-    state = init_state(jax.random.PRNGKey(11), cfg.M)
+    kw = _driver_kwargs(backend, request)
+    compiled = driver.make_run(cfg, 2, backend, **kw)
+    state = driver.place_initial_state(
+        init_state(jax.random.PRNGKey(11), cfg.M), cfg, backend,
+        kw.get("mesh"))
     compiled(state, X, y)
     assert state.w.is_deleted(), f"{backend}: state.w not donated"
     with pytest.raises(RuntimeError):
@@ -392,11 +476,12 @@ def test_engine_run_records_history(problem, mesh):
                                rtol=1e-4)
 
 
-def test_distributed_objective_matches_reference(problem, mesh):
+@pytest.mark.parametrize("backend", ["shard_map", "async-mesh"])
+def test_distributed_objective_matches_reference(backend, problem, mesh):
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
     w = jax.random.normal(jax.random.PRNGKey(3), (cfg.M,)) * 0.1
-    f_dist = float(engine.make_objective(cfg, "shard_map", mesh=mesh)(X, y, w))
+    f_dist = float(engine.make_objective(cfg, backend, mesh=mesh)(X, y, w))
     f_ref = float(engine.make_objective(cfg, "reference")(X, y, w))
     np.testing.assert_allclose(f_dist, f_ref, rtol=1e-5)
 

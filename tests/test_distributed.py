@@ -13,7 +13,10 @@ import pytest
 from repro.compat import shard_map
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import engine, sodda
-from repro.core.distributed import distributed_objective, make_distributed_step
+from repro.core.distributed import (distributed_objective,
+                                    iteration_collective_bytes,
+                                    make_distributed_async_step,
+                                    make_distributed_step)
 from repro.data.synthetic import make_svm_data
 from repro.testing import medium_fixture_config, sodda_test_mesh
 
@@ -54,6 +57,71 @@ def test_shard_map_sodda_matches_reference(equiv_result):
 def test_distributed_objective_matches(equiv_result):
     r = equiv_result
     np.testing.assert_allclose(r["obj_dist"], r["obj_ref"], rtol=1e-5)
+
+
+def test_async_mesh_first_step_after_warmup_is_synchronous():
+    """The warm-up issues the exchange for the first iteration before the
+    iterate has moved, so the first stale-by-one step consumes exactly the
+    buffer the synchronous step would have computed inline — the mesh analog
+    of the single-host 'first async iteration is effectively synchronous'
+    invariant. Staleness only begins at the second step, where the mesh
+    trajectory must leave the synchronous one."""
+    cfg = SoddaConfig(P=4, Q=3, n=120, m=24, L=8, lr0=0.05)
+    X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
+    mesh = sodda_test_mesh(cfg)
+    sync_step = make_distributed_step(mesh, cfg)
+    bundle = make_distributed_async_step(mesh, cfg, staleness=1)
+
+    state = sodda.init_state(jax.random.PRNGKey(1), cfg.M)
+    carry = bundle.init_carry(state, X, y)
+    s_sync = sync_step(state, X, y)
+    carry = bundle.step(carry, X, y)
+    np.testing.assert_allclose(np.asarray(carry.w), np.asarray(s_sync.w),
+                               rtol=0, atol=1e-6)
+    # second step: the consumed buffer is now genuinely stale — the
+    # stale-by-one trajectory must diverge from the synchronous one
+    s_sync2 = sync_step(s_sync, X, y)
+    carry2 = bundle.step(carry, X, y)
+    assert float(jnp.max(jnp.abs(carry2.w - s_sync2.w))) > 0.0
+
+
+def test_issue_consume_staleness_zero_fallback():
+    """Hypothesis-free fallback for the issue∘consume property test in
+    tests/test_property.py: at staleness=0 the composed halves are bitwise
+    the synchronous make_distributed_step for arbitrary (w, key, t), and the
+    NaN-poisoned stale buffer is provably unconsumed. Fixed seed/t sweep."""
+    from repro.testing import make_problem, small_fixture_config
+    cfg = small_fixture_config()
+    mesh = sodda_test_mesh(cfg)
+    X, y = make_problem(cfg)
+    sync_step = make_distributed_step(mesh, cfg)
+    bundle = make_distributed_async_step(mesh, cfg, staleness=0)
+    for seed, t in ((0, 1), (7, 2), (42, 999), (3, 10_000)):
+        key = jax.random.PRNGKey(seed)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (cfg.M,)) * 0.1
+        t_arr = jnp.array(t, jnp.int32)
+        out_sync = sync_step(sodda.SoddaState(w=w, t=t_arr, key=key), X, y)
+        out_async = bundle.step(
+            sodda.AsyncSoddaState(w=w, t=t_arr, key=key,
+                                  mu=jnp.full((cfg.M,), jnp.nan)), X, y)
+        np.testing.assert_array_equal(np.asarray(out_sync.w),
+                                      np.asarray(out_async.w), err_msg=f"seed={seed} t={t}")
+        assert bool(jnp.isfinite(out_async.mu).all())
+
+
+def test_iteration_collective_bytes_accounting():
+    """The analytic wire model the bench reports: compression narrows only
+    the compressed collective 4x, the delta-psum exchange doubles the
+    assembly bytes, and async-mesh ships exactly the sync step's volume."""
+    cfg = SoddaConfig(P=4, Q=3, n=120, m=24, L=8, lr0=0.05)
+    base = iteration_collective_bytes(cfg)
+    assert base["total"] == base["z"] + base["mu"] + base["delta"]
+    assert base["z"] == 2.0 * (cfg.Q - 1) / cfg.Q * cfg.n * 4
+    q8 = iteration_collective_bytes(cfg, compress_z=True, compress_mu=True)
+    assert q8["z"] == base["z"] / 4 and q8["mu"] == base["mu"] / 4
+    assert q8["delta"] == base["delta"]
+    psum = iteration_collective_bytes(cfg, gather_deltas=False)
+    assert psum["delta"] == 2 * base["delta"]
 
 
 def test_compressed_psum_roundtrip():

@@ -20,12 +20,62 @@ def test_repo_docs_have_no_dangling_references():
 
 
 def test_docs_pages_exist_and_are_linked_from_readme():
-    for page in ("architecture.md", "backends.md"):
+    for page in ("architecture.md", "backends.md", "benchmarks.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
     assert "docs/architecture.md" in readme
     assert "docs/backends.md" in readme
+    assert "docs/benchmarks.md" in readme
+
+
+# ---------------------------------------------------------------------------
+# Registry↔docs drift: every registered backend must have a catalog entry in
+# docs/backends.md, and the checker's static source scan must agree with the
+# runtime registry it stands in for.
+# ---------------------------------------------------------------------------
+def test_registry_backends_scan_matches_runtime_registry():
+    """The static register_backend("...") scan is the dependency-free stand-
+    in for engine.available_backends() in the docs CI job; if the decoration
+    spelling ever changes, this pins the two views together."""
+    from repro.core import engine
+    scanned = check_docs.registry_backends(os.path.abspath(ROOT))
+    assert scanned == sorted(engine.available_backends()), (
+        scanned, engine.available_backends())
+
+
+def test_every_registered_backend_is_documented():
+    errors = check_docs.check_registry_documented(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_registry_drift_check_flags_undocumented_backend(tmp_path):
+    eng = tmp_path / "src" / "repro" / "core"
+    eng.mkdir(parents=True)
+    (eng / "engine.py").write_text(
+        '@register_backend("documented")\ndef a(): ...\n'
+        "@register_backend('ghost')\ndef b(): ...\n")
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "backends.md").write_text("| `documented` | fine |\n")
+    errors = check_docs.check_registry_documented(str(tmp_path))
+    assert len(errors) == 1 and "`ghost`" in errors[0], errors
+    # the drift check rides along in check_tree, which is what CI runs
+    (tmp_path / "README.md").write_text("clean\n")
+    assert errors[0] in check_docs.check_tree(str(tmp_path))
+    # documenting the backend clears it
+    (docs / "backends.md").write_text("`documented` and `ghost`\n")
+    assert check_docs.check_registry_documented(str(tmp_path)) == []
+
+
+def test_registry_drift_check_missing_catalog_page(tmp_path):
+    eng = tmp_path / "src" / "repro" / "core"
+    eng.mkdir(parents=True)
+    (eng / "engine.py").write_text('@register_backend("x")\ndef a(): ...\n')
+    errors = check_docs.check_registry_documented(str(tmp_path))
+    assert len(errors) == 1 and "missing" in errors[0]
+    # no engine source at all (foreign tree): nothing to check, no error
+    assert check_docs.check_registry_documented(str(tmp_path / "docs")) == []
 
 
 def test_checker_slug_rules():

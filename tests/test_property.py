@@ -4,6 +4,8 @@ Collectable without hypothesis installed (the whole module skips);
 hypothesis-free fallbacks for the core invariants live in
 tests/test_core_sodda.py.
 """
+import functools
+
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -91,6 +93,46 @@ def test_sample_iteration_varies_with_t(seed):
     s1 = sample_iteration(key, 0, P, Q, n, M, L, M // 2, M // 4, n // 2)
     s2 = sample_iteration(key, 1, P, Q, n, M, L, M // 2, M // 4, n // 2)
     assert not np.array_equal(np.asarray(s1.mask_b), np.asarray(s2.mask_b))
+
+
+# ---------------------------------------------------------------------------
+# make_local_halves invariant: composing the issue/consume halves with
+# staleness=0 (consume reads the buffer just issued) must be bitwise the
+# synchronous make_distributed_step, for ANY iterate, key, and iteration
+# counter — the contract that lets the async-mesh backend claim the sync
+# step as its degenerate case. The stale buffer in the carry is poisoned
+# with NaN to prove it is genuinely unconsumed at staleness=0.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def _mesh_step_pair():
+    from repro.core.distributed import (make_distributed_async_step,
+                                        make_distributed_step)
+    from repro.testing import (make_problem, small_fixture_config,
+                               sodda_test_mesh)
+    cfg = small_fixture_config()
+    mesh = sodda_test_mesh(cfg)
+    X, y = make_problem(cfg)
+    sync_step = make_distributed_step(mesh, cfg)
+    bundle = make_distributed_async_step(mesh, cfg, staleness=0)
+    return cfg, X, y, sync_step, bundle
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 10_000))
+def test_issue_consume_staleness_zero_bitwise_equals_sync_step(seed, t):
+    cfg, X, y, sync_step, bundle = _mesh_step_pair()
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (cfg.M,)) * 0.1
+    t_arr = jnp.array(t, jnp.int32)
+    state = sodda.SoddaState(w=w, t=t_arr, key=key)
+    carry = sodda.AsyncSoddaState(w=w, t=t_arr, key=key,
+                                  mu=jnp.full((cfg.M,), jnp.nan))
+    out_sync = sync_step(state, X, y)
+    out_async = bundle.step(carry, X, y)
+    np.testing.assert_array_equal(np.asarray(out_sync.w),
+                                  np.asarray(out_async.w))
+    assert int(out_async.t) == t + 1
+    # the buffer issued into the next carry is finite (never the NaN poison)
+    assert bool(jnp.isfinite(out_async.mu).all())
 
 
 @given(st.integers(0, 2**31 - 1))

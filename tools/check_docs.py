@@ -13,6 +13,13 @@ silently-broken documentation behind:
     ``repro.core.driver.make_run``) — some prefix of at least two components
     must resolve to a module or package under ``src/``.
 
+It also checks the reverse direction for the engine registry: every backend
+registered in ``src/repro/core/engine.py`` must appear (backticked) in the
+``docs/backends.md`` catalog, so a new backend cannot land undocumented.
+The registry is read by scanning the source for ``@register_backend("...")``
+decorations — pure stdlib, no jax import — so the CI docs job stays
+dependency-free.
+
 Exit status 0 when clean, 1 with one line per dangling reference:
 
     python tools/check_docs.py            # from the repo root
@@ -124,10 +131,55 @@ def check_file(md_path: str, root: str):
     return errors
 
 
+_ENGINE_SRC = os.path.join("src", "repro", "core", "engine.py")
+_BACKENDS_DOC = os.path.join("docs", "backends.md")
+_REGISTER_RE = re.compile(r"register_backend\(\s*['\"]([^'\"]+)['\"]")
+
+
+def registry_backends(root: str):
+    """Backend names registered in the engine source, by static scan.
+
+    Matches every ``register_backend("name")`` decoration in
+    ``src/repro/core/engine.py`` — the same names
+    ``engine.available_backends()`` reports at runtime (pinned against each
+    other in ``tests/test_docs.py``), obtained without importing jax so the
+    dependency-free docs CI job can run this check.
+    """
+    path = os.path.join(root, _ENGINE_SRC)
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        return sorted(set(_REGISTER_RE.findall(f.read())))
+
+
+def check_registry_documented(root: str):
+    """Registry↔docs drift: every registered backend has a catalog entry.
+
+    A backend counts as documented when its backticked name appears
+    anywhere in ``docs/backends.md`` (the catalog table is the intended
+    home). The check is one-directional on purpose — the catalog may
+    legitimately describe removed backends in a history note, but a
+    *registered* backend with no catalog entry is always drift.
+    """
+    backends = registry_backends(root)
+    doc_path = os.path.join(root, _BACKENDS_DOC)
+    if not backends:
+        return []
+    if not os.path.isfile(doc_path):
+        return [f"{_BACKENDS_DOC}: missing, but the engine registers "
+                f"{len(backends)} backends"]
+    with open(doc_path) as f:
+        text = f.read()
+    return [f"{_BACKENDS_DOC}: registered backend `{b}` has no catalog "
+            "entry (registry↔docs drift)"
+            for b in backends if f"`{b}`" not in text]
+
+
 def check_tree(root: str):
     errors = []
     for md in _md_files(root):
         errors.extend(check_file(md, root))
+    errors.extend(check_registry_documented(root))
     return errors
 
 
@@ -141,8 +193,9 @@ def main(argv=None) -> int:
     for e in errors:
         print(e)
     n = len(list(_md_files(root)))
-    print(f"{'FAIL' if errors else 'OK'}: {n} markdown files checked, "
-          f"{len(errors)} dangling references")
+    nb = len(registry_backends(root))
+    print(f"{'FAIL' if errors else 'OK'}: {n} markdown files + {nb} "
+          f"registered backends checked, {len(errors)} dangling references")
     return 1 if errors else 0
 
 
