@@ -104,7 +104,54 @@ def validate(payload: dict) -> dict:
         vr = b.get("vs_shard_map_us_ratio")
         if vr is not None and (not isinstance(vr, (int, float)) or vr <= 0):
             _fail(f"{ctx}.vs_shard_map_us_ratio must be positive, got {vr!r}")
+    lp = payload.get("large_problem")
+    if lp is not None:
+        _check_large_problem(lp)
     return payload
+
+
+def _check_large_problem(lp):
+    """The optional paper-Table-1-sized tiled cell (bench_driver_large).
+
+    Measured in its own subprocess on the TiledDataPlane only — the whole
+    point is that the dense `(N, M)` array is never materialized, so
+    `peak_host_bytes` (tracemalloc peak of host-side staging allocations)
+    must come in below `dense_xy_bytes` (the analytic footprint the dense
+    plane would have paid).
+    """
+    ctx = "large_problem"
+    if not isinstance(lp, dict):
+        _fail(f"{ctx}: must be an object")
+    problem = lp.get("problem")
+    if not isinstance(problem, dict):
+        _fail(f"{ctx}.problem: missing object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"{ctx}.problem.{k} must be {ty.__name__}, "
+                  f"got {problem.get(k)!r}")
+    if lp.get("plane") != "tiled":
+        _fail(f"{ctx}.plane must be 'tiled' (the dense plane cannot run "
+              f"this size), got {lp.get('plane')!r}")
+    if not isinstance(lp.get("backend"), str):
+        _fail(f"{ctx}.backend must be a string, got {lp.get('backend')!r}")
+    it = lp.get("iters")
+    if not isinstance(it, int) or it < 1:
+        _fail(f"{ctx}.iters must be a positive int, got {it!r}")
+    for k in ("us_per_iter", "dense_xy_bytes"):
+        v = lp.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            _fail(f"{ctx}.{k} must be positive, got {v!r}")
+    for k in ("peak_host_bytes", "rss_peak_bytes"):
+        v = lp.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            _fail(f"{ctx}.{k} must be a non-negative number, got {v!r}")
+    fl = lp.get("final_loss")
+    if not isinstance(fl, (int, float)):
+        _fail(f"{ctx}.final_loss must be a number, got {fl!r}")
+    if lp["peak_host_bytes"] >= lp["dense_xy_bytes"]:
+        _fail(f"{ctx}: peak_host_bytes ({lp['peak_host_bytes']}) must be "
+              f"below the dense footprint ({lp['dense_xy_bytes']}) — the "
+              "tiled plane's acceptance criterion")
 
 
 def main(argv=None) -> int:

@@ -2,7 +2,11 @@
 
 Runs the paper's algorithm with observations sharded over the 'data' mesh
 axis and features over the 'model' axis — the TPU realization of the paper's
-P x Q worker grid. On this CPU container we emulate a 4x3 pod slice:
+P x Q worker grid. The data comes from the sharded-on-creation
+``TiledDataPlane``: every worker's (n, m) tile is generated straight into
+its device shard from a fold_in-derived key, so no host-global (N, M) array
+ever exists (see ``docs/data.md``). On this CPU container we emulate a 4x3
+pod slice:
 
     PYTHONPATH=src python examples/doubly_distributed_svm.py
 """
@@ -16,7 +20,7 @@ import jax
 
 from repro.configs.sodda_svm import SoddaConfig
 from repro.core import driver, engine
-from repro.data.synthetic import make_svm_data
+from repro.data.plane import TiledDataPlane
 
 
 def main():
@@ -24,12 +28,15 @@ def main():
     print(f"devices: {len(jax.devices())}; grid P={cfg.P} x Q={cfg.Q}")
     mesh = engine.make_mesh_for(cfg)
 
-    X, y, _ = make_svm_data(jax.random.PRNGKey(0), cfg.N, cfg.M)
+    plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q)
+    print(f"data plane: tiled, {cfg.P}x{cfg.Q} tiles of "
+          f"({plane.n}, {plane.m}) — dense footprint "
+          f"{plane.dense_nbytes/1e6:.1f} MB never materialized")
 
     # scan-compiled driver: all 30 outer iterations fuse into ONE device
     # program; the objective history is recorded on device and synced once
     t0 = time.time()
-    _, hist = driver.run(jax.random.PRNGKey(1), X, y, cfg, 30, "shard_map",
+    _, hist = driver.run(jax.random.PRNGKey(1), plane, cfg, 30, "shard_map",
                          record_every=5, mesh=mesh)
     dt = time.time() - t0
     for t, f in hist:

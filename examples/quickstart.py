@@ -35,13 +35,13 @@ def main(argv=None):
 
     record = max(1, args.iters // 6)
     t0 = time.time()
-    _, hist = driver.run(jax.random.PRNGKey(1), X, y, cfg, args.iters,
+    _, hist = driver.run(jax.random.PRNGKey(1), (X, y), cfg, args.iters,
                          "reference", record_every=record)
     print("SODDA      loss trajectory:",
           " ".join(f"{t}:{v:.4f}" for t, v in hist), f"({time.time()-t0:.1f}s)")
 
     t0 = time.time()
-    _, hist_r = driver.run(jax.random.PRNGKey(1), X, y, cfg, args.iters,
+    _, hist_r = driver.run(jax.random.PRNGKey(1), (X, y), cfg, args.iters,
                            "radisa-avg", record_every=record)
     print("RADiSA-avg loss trajectory:",
           " ".join(f"{t}:{v:.4f}" for t, v in hist_r),

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
-                                         restore_checkpoint, save_checkpoint)
+                                         read_extra, restore_checkpoint,
+                                         save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_extra",
+           "latest_step", "CheckpointManager"]

@@ -73,6 +73,24 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_extra(directory: str, step: Optional[int] = None) -> Tuple[int, dict]:
+    """(step, extra) of a committed checkpoint, without loading any arrays.
+
+    Lets a caller validate run metadata stored in ``extra`` (e.g. the
+    resumable driver's backend/record_every stamp) *before* committing to a
+    template-shaped :func:`restore_checkpoint` — a template mismatch there
+    surfaces as an opaque missing-leaf error.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest["step"], manifest.get("extra", {})
+
+
 def restore_checkpoint(directory: str, template, step: Optional[int] = None,
                        verify: bool = True) -> Tuple[int, Any, dict]:
     """template: pytree with the target structure (arrays or SDS)."""

@@ -30,9 +30,24 @@ from repro.core.partition import _exact_count_mask
 from repro.core.sodda import (AsyncSoddaState, SoddaState, _counts, _gamma,
                               inner_loop)
 
-__all__ = ["make_distributed_step", "make_distributed_async_step",
-           "make_local_halves", "distributed_objective",
-           "iteration_collective_bytes"]
+__all__ = ["data_shardings", "make_distributed_step",
+           "make_distributed_async_step", "make_local_halves",
+           "distributed_objective", "iteration_collective_bytes"]
+
+
+def data_shardings(mesh):
+    """The (X, y) placement of the doubly-distributed step, as shardings.
+
+    X is tiled ``P('data', 'model')`` — worker (p, q)'s resident block
+    x^{p,q} — and y is split ``P('data')`` (each observation partition's
+    labels replicated across its mesh row). These are exactly the in_specs
+    of every shard_map body in this module; ``DataPlane.materialize_for``
+    places data with them *before* dispatch, so the compiled step finds its
+    tiles already resident instead of scattering a host-global array.
+    """
+    from jax.sharding import NamedSharding
+    return (NamedSharding(mesh, P("data", "model")),
+            NamedSharding(mesh, P("data")))
 
 
 def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,

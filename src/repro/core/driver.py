@@ -46,11 +46,25 @@ the initial state already carries the program's output sharding;
 :func:`run` places it there via :func:`place_initial_state`, and callers
 driving a :func:`make_run` executable by hand should do the same.
 
+Data-plane contract
+-------------------
+Every run entry point takes ``data`` — a ``repro.data.plane.DataPlane`` or
+a raw ``(X, y)`` pair (coerced by ``as_data_plane``). The driver never
+places data itself: it hands the plane to the backend bundle's
+``place_data`` half, which materializes the tiles with the placement the
+backend consumes (sharded ``P('data','model')`` over the mesh for mesh
+backends — each tile resident on its worker before dispatch — assembled on
+the default device otherwise). Placement is layout only; swapping planes
+with the same key cannot change the math (held BITWISE per backend in
+``tests/test_conformance.py``). See ``docs/data.md``.
+
 :func:`run` keeps the exact ``(final_state, [(t, F(w^t))])`` contract of the
 legacy drivers (``engine.run`` / ``sodda.run`` / ``radisa.run_radisa_avg``
 are now thin wrappers over it). :func:`run_python_loop` preserves the old
 per-iteration dispatch loop as the benchmark baseline and the parity oracle
-for ``tests/test_conformance.py``. Note that backends may be
+for ``tests/test_conformance.py``. :func:`run_resumable` splits ``iters``
+into checkpointed segments (one compiled dispatch each) so a preempted run
+resumes mid-trajectory, bitwise. Note that backends may be
 bitwise-nondeterministic *relative to the reference trajectory* while still
 correct — the async backend legitimately diverges iterate-by-iterate and is
 held to the relaxed ``STALENESS`` policy of ``repro.testing.tolerances``
@@ -70,7 +84,7 @@ from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 
 __all__ = ["record_ticks", "make_run", "place_initial_state", "run",
-           "run_python_loop"]
+           "run_resumable", "run_python_loop"]
 
 
 def record_ticks(iters: int, record_every: int) -> Tuple[int, ...]:
@@ -181,17 +195,36 @@ def place_initial_state(state, cfg: SoddaConfig, backend: str, mesh=None):
         key=jax.device_put(state.key, NamedSharding(mesh, P())))
 
 
-def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
+def _placed_data(data, cfg: SoddaConfig, backend: str, mesh, options):
+    """Coerce `data` to a plane, validate it against `cfg`, and place it
+    through the backend bundle's ``place_data`` half."""
+    from repro.data.plane import as_data_plane
+
+    plane = as_data_plane(data)
+    if (plane.N, plane.M) != (cfg.N, cfg.M):
+        raise ValueError(
+            f"data plane shape ({plane.N}, {plane.M}) does not match cfg "
+            f"{cfg.name!r} ({cfg.N}, {cfg.M})")
+    bundle = _cached_bundle(cfg, backend, mesh, options)
+    return bundle, bundle.place_data(plane)
+
+
+def run(key, data, cfg: SoddaConfig, iters: int, backend: str = "reference",
         *, record_every: int = 1, mesh=None, **options):
     """Run `iters` outer iterations of `backend` as one fused device program.
 
-    Returns ``(final_state, [(t, F(w^t)) history])`` — the exact contract of
-    the legacy per-iteration drivers, produced with a single dispatch and a
-    single end-of-run host sync. The objective is always the exact
-    single-host one so histories are comparable across backends.
+    ``data`` is a ``repro.data.plane.DataPlane`` or a raw ``(X, y)`` pair,
+    placed for `backend` before the dispatch (see the data-plane contract
+    in the module docstring). Returns ``(final_state, [(t, F(w^t))
+    history])`` — the exact contract of the legacy per-iteration drivers,
+    produced with a single dispatch and a single end-of-run host sync. The
+    objective is always the exact single-host one so histories are
+    comparable across backends.
     """
     from repro.core.sodda import init_state
 
+    _, (X, y) = _placed_data(data, cfg, backend, mesh,
+                             tuple(sorted(options.items())))
     compiled = make_run(cfg, iters, backend, record_every=record_every,
                         mesh=mesh, **options)
     # copy the key: the state is donated, and donating an alias of the
@@ -207,8 +240,8 @@ def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_loop_bundle(cfg: SoddaConfig, backend: str, mesh,
-                        options: Tuple[Tuple[str, object], ...]):
+def _cached_bundle(cfg: SoddaConfig, backend: str, mesh,
+                   options: Tuple[Tuple[str, object], ...]):
     from repro.core import engine
     return engine.make_bundle(cfg, backend, mesh=mesh, **dict(options))
 
@@ -218,12 +251,13 @@ def _cached_objective(loss: str):
     return jax.jit(functools.partial(losses.objective, loss))
 
 
-def run_python_loop(key, X, y, cfg: SoddaConfig, iters: int,
+def run_python_loop(key, data, cfg: SoddaConfig, iters: int,
                     backend: str = "reference", *, record_every: int = 1,
                     mesh=None, **options):
     """The legacy per-iteration dispatch loop (one jit call + one host sync
     per recorded objective). Kept as the benchmark baseline the scan driver
     is measured against and as the parity oracle for the conformance suite.
+    ``data`` is a plane or an ``(X, y)`` pair, like :func:`run`.
 
     The step and objective executables are cached across calls (a fresh
     ``jax.jit`` wrapper per call would be a jit-cache miss), so a short
@@ -233,8 +267,8 @@ def run_python_loop(key, X, y, cfg: SoddaConfig, iters: int,
     from repro.core.sodda import init_state
 
     record_ticks(iters, record_every)  # same argument validation as run()
-    bundle = _cached_loop_bundle(cfg, backend, mesh,
-                                 tuple(sorted(options.items())))
+    bundle, (X, y) = _placed_data(data, cfg, backend, mesh,
+                                  tuple(sorted(options.items())))
     obj = _cached_objective(cfg.loss)
     carry = bundle.init_carry(init_state(key, cfg.M), X, y)
     hist = []
@@ -245,3 +279,200 @@ def run_python_loop(key, X, y, cfg: SoddaConfig, iters: int,
     state = bundle.finalize(carry)
     hist.append((iters, float(obj(X, y, state.w))))
     return state, hist
+
+
+# ---------------------------------------------------------------------------
+# Resumable runs: segment the trajectory at checkpoint boundaries.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _cached_segment_run(cfg: SoddaConfig, seg_iters: int, backend: str,
+                        record_every: int, mesh,
+                        options: Tuple[Tuple[str, object], ...]):
+    """Compiled carry-level segment ``(carry, X, y) -> (carry, fs)``.
+
+    Unlike :func:`_cached_run` this neither builds nor strips the carry
+    (``init_carry``/``finalize`` run once per *run*, not per segment — the
+    async exchange buffer must survive segment boundaries or resuming would
+    silently restart the staleness schedule) and records the objective at
+    chunk *entries* only: a segment's exit iterate is the next segment's
+    entry, so the per-segment histories concatenate into exactly the
+    uninterrupted run's ticks, with the final objective appended once by
+    :func:`run_resumable`.
+
+    Deliberately NOT donated, unlike :func:`_cached_run`: the segment carry
+    is rebound in a host-side chain (``carry, fs = compiled(carry, ...)``),
+    and on this jax/CPU combination a donated input whose last reference
+    dies while the aliased output lives on is corrupted nondeterministically
+    when the executable is deserialized from the persistent compilation
+    cache (reproducible via ``tests/test_resumable.py`` on a warm
+    ``.pytest_cache/jax_compilation_cache``). A segment copies one carry —
+    a few KB per *segment*, noise next to the checkpoint write it
+    accompanies.
+    """
+    from repro.core import engine
+
+    bundle = engine.make_bundle(cfg, backend, mesh=mesh, **dict(options))
+    obj = functools.partial(losses.objective, cfg.loss)
+    lens = jnp.asarray(_chunk_lengths(seg_iters, record_every), jnp.int32)
+
+    def _run(carry, X, y):
+        def chunk(c, length):
+            f = obj(X, y, c.w)
+            c = jax.lax.fori_loop(0, length,
+                                  lambda _, cc: bundle.step(cc, X, y), c)
+            return c, f
+
+        return jax.lax.scan(chunk, carry, lens)
+
+    return jax.jit(_run)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_init_carry(cfg: SoddaConfig, backend: str, mesh,
+                       options: Tuple[Tuple[str, object], ...]):
+    """Jitted warm-up half for the segmented driver.
+
+    Eager execution would dispatch the async backends' warm-up exchange
+    op-by-op (orders of magnitude slower through shard_map) and round
+    differently from the fused program, costing the resumable driver its
+    bitwise parity with :func:`run` on those backends.
+    """
+    bundle = _cached_bundle(cfg, backend, mesh, options)
+    return jax.jit(bundle.init_carry)
+
+
+def _key_stamp(key):
+    """The run's base PRNG key as JSON-able ints (for the resume guard)."""
+    return [int(x) for x in np.asarray(key).ravel().tolist()]
+
+
+def _data_fingerprint(plane) -> str:
+    """A cheap content fingerprint of a data plane for the resume guard.
+
+    Hashes the grid metadata plus the corner tile and first label block —
+    one tile's regeneration, not a pass over the full dataset — which
+    distinguishes different keys/datasets with overwhelming probability
+    (the guard is against silent mistakes, not adversaries). Content only,
+    no plane kind: dense and tiled planes from the same key are the same
+    data (placement is layout, never math), so either resumes the other.
+    """
+    import hashlib
+
+    h = hashlib.sha256()
+    h.update(repr((plane.N, plane.M, plane.P, plane.Q)).encode())
+    h.update(np.asarray(plane.x_tile(0, 0)).tobytes())
+    h.update(np.asarray(plane.y_block(0)).tobytes())
+    return h.hexdigest()
+
+
+def run_resumable(key, data, cfg: SoddaConfig, iters: int,
+                  backend: str = "reference", *, checkpoint_dir: str,
+                  segment_iters: int, record_every: int = 1, mesh=None,
+                  keep: int = 3, on_segment=None, **options):
+    """:func:`run` split into checkpointed segments (ROADMAP "Driver-level
+    checkpointing", the host-side version: chunk boundary = preemption
+    point).
+
+    The trajectory runs as ``ceil(iters / segment_iters)`` compiled
+    dispatches; after each one the backend's scan *carry* (not just the
+    ``SoddaState`` — the async exchange buffer rides along) and the history
+    so far are written through ``repro.checkpoint`` into `checkpoint_dir`.
+    A rerun with the same arguments restores the latest committed segment
+    boundary and continues; because the carry round-trips losslessly
+    (float32/uint32 → npy → device) and every segment replays the same
+    compiled program, the resumed trajectory is **bitwise** the
+    uninterrupted one (regression-tested in ``tests/test_resumable.py``).
+
+    ``segment_iters`` must be a multiple of ``record_every`` so segment
+    boundaries land on recording ticks. ``on_segment(iters_done)`` is an
+    optional host callback after each segment's save — the seam the
+    kill-and-resume test injects its preemption through. Returns the exact
+    ``(final_state, [(t, F(w^t)) history])`` contract of :func:`run`.
+    """
+    from repro.checkpoint import CheckpointManager, latest_step, \
+        read_extra, restore_checkpoint
+    from repro.core.sodda import init_state
+
+    record_ticks(iters, record_every)  # validate iters/record_every
+    if segment_iters < 1:
+        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
+    if segment_iters % record_every:
+        raise ValueError(
+            f"segment_iters ({segment_iters}) must be a multiple of "
+            f"record_every ({record_every}) so segment boundaries land on "
+            "recording ticks")
+    from repro.data.plane import as_data_plane
+
+    opt_key = tuple(sorted(options.items()))
+    plane = as_data_plane(data)
+    bundle, (X, y) = _placed_data(plane, cfg, backend, mesh, opt_key)
+    fingerprint = _data_fingerprint(plane)
+    manager = CheckpointManager(checkpoint_dir, every=segment_iters,
+                                keep=keep)
+
+    # the t=0 carry doubles as the restore template (same pytree structure
+    # and shardings as every later carry)
+    state0 = place_initial_state(init_state(jnp.array(key, copy=True), cfg.M),
+                                 cfg, backend, mesh)
+    carry = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
+    done, hist = 0, []
+    latest = latest_step(checkpoint_dir)
+    if latest is not None:
+        if latest > iters:
+            raise ValueError(
+                f"checkpoint at iteration {latest} in {checkpoint_dir!r} is "
+                f"beyond the requested iters={iters}")
+        # a checkpoint resumed under different run parameters would splice a
+        # mixed-cadence (or different-algorithm) history together without
+        # any numerical error to catch it: a changed staleness continues a
+        # different algorithm, a changed segment_iters strands `done` off
+        # the save cadence (maybe_save never fires again). Refuse BEFORE
+        # the template-shaped restore (a backend mismatch would otherwise
+        # surface as an opaque missing-leaf error).
+        _, extra = read_extra(checkpoint_dir, latest)
+        want = {"backend": backend, "record_every": record_every,
+                "segment_iters": segment_iters,
+                # JSON round-trips tuples as lists; normalize for comparison
+                "options": [list(kv) for kv in opt_key],
+                # same-shaped but different data would splice two problems
+                # into one trajectory just as silently...
+                "data": fingerprint,
+                # ...and a different seed would return the old seed's
+                # trajectory relabeled (the restored carry holds the RNG
+                # state; the key argument only builds the template)
+                "key": _key_stamp(key)}
+        for k, v in want.items():
+            if k in extra and extra[k] != v:
+                raise ValueError(
+                    f"checkpoint in {checkpoint_dir!r} was written with "
+                    f"{k}={extra[k]!r}; resuming with {k}={v!r} would "
+                    "corrupt the trajectory/history — use a fresh "
+                    "checkpoint_dir or the original parameters")
+        done, restored, extra = restore_checkpoint(checkpoint_dir, carry)
+        carry = jax.tree.map(
+            lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+            restored, carry)
+        hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
+
+    while done < iters:
+        seg = min(segment_iters, iters - done)
+        compiled = _cached_segment_run(cfg, seg, backend, record_every, mesh,
+                                       opt_key)
+        carry, fs = compiled(carry, X, y)
+        hist += [(done + t, float(f))
+                 for t, f in zip(range(0, seg, record_every), np.asarray(fs))]
+        done += seg
+        manager.maybe_save(done, carry,
+                           extra={"history": [[t, f] for t, f in hist],
+                                  "backend": backend,
+                                  "record_every": record_every,
+                                  "segment_iters": segment_iters,
+                                  "options": [list(kv) for kv in opt_key],
+                                  "data": fingerprint,
+                                  "key": _key_stamp(key)})
+        if on_segment is not None:
+            on_segment(done)
+
+    final = bundle.finalize(carry)
+    hist.append((iters, float(_cached_objective(cfg.loss)(X, y, final.w))))
+    return final, hist

@@ -41,6 +41,13 @@ backend threads its exchange buffer through it), in which case the carry
 still exposes ``.w``/``.t``/``.key`` and :func:`make_bundle` provides the
 ``init_carry`` (warm-up) and ``finalize`` halves the driver composes around
 the scan. See ``docs/architecture.md`` for the full carry contract.
+
+The ``(X, y)`` a step consumes come from a data plane
+(``repro.data.plane``): :func:`make_bundle` binds the backend's resolved
+mesh into the bundle's ``place_data`` half, which materializes a
+``DataPlane`` (or raw pair) with the placement this backend expects —
+tiles sharded ``P('data','model')`` over the mesh for the mesh backends.
+See ``docs/data.md``.
 """
 from __future__ import annotations
 
@@ -149,11 +156,21 @@ class StepBundle(NamedTuple):
     host round-trip. Every carry must expose ``.w`` so the driver can record
     the objective mid-scan. Plain step functions are wrapped into trivial
     bundles by :func:`make_bundle` (identity init/finalize).
+
+    ``place_data`` is the bundle's data-plane half: it maps a
+    ``repro.data.plane.DataPlane`` (or a raw ``(X, y)`` pair) to the placed
+    arrays this backend's step consumes — sharded over the backend's mesh
+    for the mesh backends, assembled on the default device otherwise.
+    Factories normally leave it ``None`` and :func:`make_bundle` fills in
+    the placement matched to the backend's resolved mesh, so "which worker
+    holds which block" is decided by the data plane, not re-derived per
+    backend.
     """
 
     step: StepFn  # (carry, X, y) -> carry
     init_carry: Callable  # (SoddaState, X, y) -> carry
     finalize: Callable  # carry -> SoddaState
+    place_data: Optional[Callable] = None  # DataPlane | (X, y) -> (X, y)
 
 
 def _as_bundle(obj) -> StepBundle:
@@ -162,6 +179,11 @@ def _as_bundle(obj) -> StepBundle:
     return StepBundle(step=obj,
                       init_carry=lambda state, X, y: state,
                       finalize=lambda carry: carry)
+
+
+def _place_data(backend: str, mesh, data):
+    from repro.data.plane import as_data_plane
+    return as_data_plane(data).materialize_for(backend, mesh=mesh)
 
 
 BackendFactory = Callable[[SoddaConfig, EngineOptions], StepFn]
@@ -324,10 +346,11 @@ def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
                 staleness: Optional[int] = None) -> StepBundle:
     """Build the full :class:`StepBundle` (step + carry protocol) for `backend`.
 
-    This is what the scan driver composes: ``init_carry`` (warm-up) before
-    the scan, ``step`` inside it, ``finalize`` after. For plain backends the
-    init/finalize halves are identities and the carry is the ``SoddaState``
-    itself.
+    This is what the scan driver composes: ``place_data`` (DataPlane ->
+    placed arrays) outside the compiled program, ``init_carry`` (warm-up)
+    before the scan, ``step`` inside it, ``finalize`` after. For plain
+    backends the init/finalize halves are identities and the carry is the
+    ``SoddaState`` itself.
     """
     try:
         factory = _REGISTRY[backend]
@@ -335,10 +358,19 @@ def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
         raise ValueError(
             f"unknown backend {backend!r}; available: {available_backends()}"
         ) from None
+    if backend in MESH_BACKENDS and mesh is None:
+        # resolved here (not in the factory) so the bundle's place_data half
+        # shards onto the same mesh the step executes on
+        mesh = make_mesh_for(cfg)
     opts = EngineOptions(mesh=mesh, gather_deltas=gather_deltas,
                          compress_mu=compress_mu, compress_z=compress_z,
                          staleness=staleness)
-    return _as_bundle(factory(cfg, opts))
+    bundle = _as_bundle(factory(cfg, opts))
+    if bundle.place_data is None:
+        data_mesh = opts.mesh if backend in MESH_BACKENDS else None
+        bundle = bundle._replace(
+            place_data=functools.partial(_place_data, backend, data_mesh))
+    return bundle
 
 
 def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
@@ -355,35 +387,50 @@ def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
                        staleness=staleness).step
 
 
-def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None):
+def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
+                   data=None):
     """Objective ``F(X, y, w)`` evaluated the way `backend` would see it.
 
     Backends without a sharded objective (including externally registered
     ones) get the exact single-host objective — same math, one device.
+
+    With ``data`` (a ``repro.data.plane.DataPlane`` or an ``(X, y)`` pair),
+    the returned callable is instead the closed objective ``F(w)``: the
+    plane is materialized once with the placement `backend` consumes
+    (sharded over the mesh for mesh backends) and bound in.
     """
     if backend not in _REGISTRY:
         raise ValueError(
             f"unknown backend {backend!r}; available: {available_backends()}")
+    obj_mesh = None
     if backend in MESH_BACKENDS:
         from repro.core.distributed import distributed_objective
-        return distributed_objective(
-            _resolve_mesh(cfg, EngineOptions(mesh=mesh)), cfg)
-    if mesh is not None:
-        raise ValueError(
-            f"backend {backend!r} runs on one host and takes no mesh")
-    return jax.jit(functools.partial(losses.objective, cfg.loss))
+        obj_mesh = _resolve_mesh(cfg, EngineOptions(mesh=mesh))
+        obj = distributed_objective(obj_mesh, cfg)
+    else:
+        if mesh is not None:
+            raise ValueError(
+                f"backend {backend!r} runs on one host and takes no mesh")
+        obj = jax.jit(functools.partial(losses.objective, cfg.loss))
+    if data is None:
+        return obj
+    X, y = _place_data(backend, obj_mesh, data)
+    return functools.partial(obj, X, y)
 
 
-def run(key, X, y, cfg: SoddaConfig, iters: int, backend: str = "reference",
+def run(key, data, cfg: SoddaConfig, iters: int, backend: str = "reference",
         *, record_every: int = 1, mesh=None, **options):
     """Engine-level run for any backend — now the scan-compiled driver.
 
-    Returns (final state, [(t, F(w^t)) history]); the objective is always
-    the exact single-host one so histories are comparable across backends.
-    All ``iters`` iterations fuse into one device program (see
-    ``repro.core.driver``); the legacy per-iteration loop survives as
-    ``driver.run_python_loop`` for benchmarking and parity testing.
+    ``data`` is a ``repro.data.plane.DataPlane`` or a raw ``(X, y)`` pair;
+    it is placed for `backend` by the bundle's ``place_data`` half before
+    the single dispatch. Returns (final state, [(t, F(w^t)) history]); the
+    objective is always the exact single-host one so histories are
+    comparable across backends. All ``iters`` iterations fuse into one
+    device program (see ``repro.core.driver``); the legacy per-iteration
+    loop survives as ``driver.run_python_loop`` for benchmarking and parity
+    testing.
     """
     from repro.core import driver
-    return driver.run(key, X, y, cfg, iters, backend,
+    return driver.run(key, data, cfg, iters, backend,
                       record_every=record_every, mesh=mesh, **options)

@@ -63,7 +63,7 @@ def radisa_avg_step(state: SoddaState, X, y, cfg: SoddaConfig):
 def run_radisa_avg(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1):
     """Scan-compiled RADiSA-avg run via the ``radisa-avg`` engine backend."""
     from repro.core import driver  # local import: driver builds on engine
-    return driver.run(key, X, y, cfg, iters, "radisa-avg",
+    return driver.run(key, (X, y), cfg, iters, "radisa-avg",
                       record_every=record_every)
 
 

@@ -225,7 +225,7 @@ def run(key, X, y, cfg: SoddaConfig, iters: int, record_every: int = 1,
     whole trajectory is one fused device program, not a per-iteration loop.
     """
     from repro.core import driver  # local import: driver builds on engine
-    return driver.run(key, X, y, cfg, iters,
+    return driver.run(key, (X, y), cfg, iters,
                       "pallas" if use_kernel else "reference",
                       record_every=record_every)
 

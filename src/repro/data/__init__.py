@@ -1,4 +1,22 @@
-from repro.data.synthetic import make_svm_data
+from repro.data.plane import (DataPlane, DenseDataPlane, TiledDataPlane,
+                              as_data_plane, available_planes, make_plane,
+                              register_plane)
+from repro.data.synthetic import (make_svm_data, svm_feature_block_z,
+                                  svm_label_block, svm_tile_x)
 from repro.data.tokens import synthetic_token_batch, TokenPipeline
 
-__all__ = ["make_svm_data", "synthetic_token_batch", "TokenPipeline"]
+__all__ = [
+    "DataPlane",
+    "DenseDataPlane",
+    "TiledDataPlane",
+    "as_data_plane",
+    "available_planes",
+    "make_plane",
+    "register_plane",
+    "make_svm_data",
+    "svm_tile_x",
+    "svm_label_block",
+    "svm_feature_block_z",
+    "synthetic_token_batch",
+    "TokenPipeline",
+]

@@ -1,0 +1,308 @@
+"""DataPlane: the block-partitioned data layer of the doubly-distributed run.
+
+The paper's data model is a (P, Q) grid of tiles — observations split P
+ways, features split Q ways, tile (p, q) resident on worker (p, q) and
+never moving. Until this module existed, that structure was imposed *after
+the fact*: a host-global ``(N, M)`` array was built first and every backend
+re-derived its blocks from it, capping the runnable problem size at what
+one host could materialize. A :class:`DataPlane` makes the block structure
+the primitive instead:
+
+* **shape/grid metadata** — ``N, M`` (global), ``P, Q`` (tile grid),
+  ``n = N//P``, ``m = M//Q`` (tile shape) — the same grid the engine's
+  ``(data, model)`` mesh uses, so tile (p, q) is exactly the shard
+  ``shard_map`` places on device (p, q) (in_spec ``P('data','model')``);
+* **per-tile access** — :meth:`DataPlane.x_tile` / :meth:`DataPlane.y_block`
+  return one block without touching the others;
+* **placement** — :meth:`DataPlane.materialize_for` produces the ``(X, y)``
+  the backend's step consumes, *placed*: sharded over the mesh for the mesh
+  backends (each tile device_put straight onto its worker), assembled on
+  the default device for the single-host ones. Which node holds which block
+  is decided here, once — not re-derived by every backend.
+
+Two implementations:
+
+``dense``  (:class:`DenseDataPlane`) — current behavior: wraps host-global
+           arrays (or builds them from the canonical tile generator via
+           :meth:`DenseDataPlane.from_key`). Peak host memory: the full
+           ``(N, M)`` footprint.
+``tiled``  (:class:`TiledDataPlane`) — sharded-on-creation: every tile is
+           generated on demand from its ``fold_in``-derived key
+           (``repro.data.synthetic.svm_tile_x``) and placed directly into
+           its device's shard; no global array ever exists on the host.
+           Generation is bitwise-identical to the corresponding slice of a
+           ``dense`` plane built from the same key, for any mesh shape —
+           so swapping planes cannot change the math, only the memory
+           model (property-tested in ``tests/test_property.py``, held
+           BITWISE across every backend in ``tests/test_conformance.py``).
+
+The contract, key-derivation scheme, and memory model are documented in
+``docs/data.md``; the registry below is statically scanned by
+``tools/check_docs.py`` so an implementation cannot land undocumented.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import synthetic
+
+__all__ = [
+    "DataPlane",
+    "DenseDataPlane",
+    "TiledDataPlane",
+    "as_data_plane",
+    "available_planes",
+    "make_plane",
+    "register_plane",
+]
+
+_REGISTRY: Dict[str, Type["DataPlane"]] = {}
+
+
+def register_plane(name: str):
+    """Register a DataPlane implementation under `name`.
+
+    The decoration is scanned statically by ``tools/check_docs.py`` (like
+    the engine's ``register_backend``), which fails CI when a registered
+    plane has no ``docs/data.md`` entry.
+    """
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"data plane {name!r} already registered")
+        _REGISTRY[name] = cls
+        cls.plane_name = name
+        return cls
+
+    return deco
+
+
+def available_planes() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_plane(kind: str, key, N: int, M: int, P: int, Q: int, **kwargs):
+    """Build a registered plane from the canonical SVM tile generator."""
+    try:
+        cls = _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown data plane {kind!r}; available: {available_planes()}"
+        ) from None
+    return cls.from_key(key, N, M, P, Q, **kwargs)
+
+
+class DataPlane(abc.ABC):
+    """Block-partitioned (X, y) with a placement method per backend kind.
+
+    Subclasses fix the tile grid at construction and provide per-tile
+    access; the base class owns the placement logic (single-host assembly
+    vs per-tile mesh placement), so a new implementation only describes
+    where its blocks *come from*, never where they *go*.
+    """
+
+    N: int
+    M: int
+    P: int
+    Q: int
+    dtype = jnp.float32
+
+    def _init_grid(self, N: int, M: int, P: int, Q: int):
+        if P < 1 or Q < 1 or N % P or M % Q:
+            raise ValueError(
+                f"tile grid ({P}, {Q}) must divide the data shape "
+                f"({N}, {M})")
+        self.N, self.M, self.P, self.Q = N, M, P, Q
+
+    @property
+    def n(self) -> int:
+        """Rows per tile (observations per partition)."""
+        return self.N // self.P
+
+    @property
+    def m(self) -> int:
+        """Columns per tile (features per partition)."""
+        return self.M // self.Q
+
+    @property
+    def dense_nbytes(self) -> int:
+        """The host footprint a dense (N, M) + (N,) materialization costs."""
+        return 4 * (self.N * self.M + self.N)
+
+    @abc.abstractmethod
+    def x_tile(self, p: int, q: int):
+        """The (n, m) feature tile of worker (p, q)."""
+
+    @abc.abstractmethod
+    def y_block(self, p: int):
+        """The (n,) label block of observation partition p."""
+
+    # -- placement ----------------------------------------------------------
+    def materialize(self):
+        """Assembled global ``(X, y)`` on the default device (row-major
+        concatenation of the tiles — the single canonical assembly order)."""
+        X = jnp.concatenate(
+            [jnp.concatenate([self.x_tile(p, q) for q in range(self.Q)],
+                             axis=1) for p in range(self.P)], axis=0)
+        y = jnp.concatenate([self.y_block(p) for p in range(self.P)])
+        return X, y
+
+    def materialize_for(self, backend: str, mesh=None):
+        """``(X, y)`` placed the way `backend`'s step consumes them.
+
+        With a mesh: global-shaped arrays sharded ``P('data','model')`` /
+        ``P('data')`` over it — the exact in_specs of the distributed step,
+        so dispatch moves no bytes. Without one: the assembled arrays on
+        the default device. Placement is layout only; the values are
+        bitwise-independent of it.
+        """
+        if mesh is None:
+            return self.materialize()
+        return self._materialize_mesh(mesh)
+
+    def _materialize_mesh(self, mesh):
+        from repro.core.distributed import data_shardings
+        x_sharding, y_sharding = data_shardings(mesh)
+        Pm, Qm = mesh.shape["data"], mesh.shape["model"]
+        if (Pm, Qm) != (self.P, self.Q):
+            # shard grid != tile grid: assemble, let device_put re-split.
+            # For a tiled plane this voids its whole memory model (the
+            # assembled (N, M) array is exactly what it exists to avoid),
+            # so the fallback is loud, not silent.
+            import warnings
+            warnings.warn(
+                f"{type(self).__name__} tile grid ({self.P}, {self.Q}) != "
+                f"mesh shape ({Pm}, {Qm}): falling back to assembling the "
+                f"full ({self.N}, {self.M}) array before re-splitting — "
+                "match the grids to keep per-tile placement",
+                stacklevel=3)
+            X, y = self.materialize()
+            return (jax.device_put(X, x_sharding),
+                    jax.device_put(y, y_sharding))
+        x_parts, y_parts = [], []
+        y_cache = {}  # one y_block(p) per row, shared by the row's Q devices
+        index_map = x_sharding.addressable_devices_indices_map((self.N,
+                                                                self.M))
+        for device, (rows, cols) in index_map.items():
+            p = (rows.start or 0) // self.n
+            q = (cols.start or 0) // self.m
+            if p not in y_cache:
+                y_cache[p] = self.y_block(p)
+            x_parts.append(jax.device_put(self.x_tile(p, q), device))
+            y_parts.append(jax.device_put(y_cache[p], device))
+        X = jax.make_array_from_single_device_arrays(
+            (self.N, self.M), x_sharding, x_parts)
+        y = jax.make_array_from_single_device_arrays(
+            (self.N,), y_sharding, y_parts)
+        return X, y
+
+
+@register_plane("dense")
+class DenseDataPlane(DataPlane):
+    """Host-global arrays behind the DataPlane interface (current behavior).
+
+    Wraps existing ``(X, y)`` (any tile grid that divides them, default
+    (1, 1)) or builds the arrays on the host from the canonical tile
+    generator (:meth:`from_key` — numpy assembly, so the full ``(N, M)``
+    footprint is genuinely paid, which is the point of this baseline).
+    """
+
+    def __init__(self, X, y, grid: Tuple[int, int] = (1, 1)):
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        if X.ndim != 2 or y.shape != (X.shape[0],):
+            raise ValueError(
+                f"need X (N, M) and y (N,), got {X.shape} / {y.shape}")
+        self._init_grid(X.shape[0], X.shape[1], grid[0], grid[1])
+        self._X, self._y = X, y
+
+    @classmethod
+    def from_key(cls, key, N: int, M: int, P: int, Q: int,
+                 flip_prob: float = 0.01) -> "DenseDataPlane":
+        n, m = N // P, M // Q
+        if N % P or M % Q:
+            raise ValueError(f"grid ({P}, {Q}) must divide ({N}, {M})")
+        X = np.concatenate(
+            [np.concatenate(
+                [np.asarray(synthetic.svm_tile_x(key, p, q, n, m))
+                 for q in range(Q)], axis=1) for p in range(P)], axis=0)
+        y = np.concatenate(
+            [np.asarray(synthetic.svm_label_block(key, p, n, Q, m,
+                                                  flip_prob=flip_prob))
+             for p in range(P)])
+        return cls(X, y, grid=(P, Q))
+
+    def x_tile(self, p: int, q: int):
+        n, m = self.n, self.m
+        return self._X[p * n:(p + 1) * n, q * m:(q + 1) * m]
+
+    def y_block(self, p: int):
+        n = self.n
+        return self._y[p * n:(p + 1) * n]
+
+    def materialize(self):
+        return self._X, self._y
+
+    def _materialize_mesh(self, mesh):
+        from repro.core.distributed import data_shardings
+        x_sharding, y_sharding = data_shardings(mesh)
+        return (jax.device_put(self._X, x_sharding),
+                jax.device_put(self._y, y_sharding))
+
+
+@register_plane("tiled")
+class TiledDataPlane(DataPlane):
+    """Sharded-on-creation plane: tiles generated straight into their shard.
+
+    No global array is ever materialized on the host; each ``(p, q)`` tile
+    is generated from its ``fold_in``-derived key on demand
+    (``repro.data.synthetic.svm_tile_x``) and, on a mesh, device_put
+    directly onto worker (p, q). Generation is bitwise-equal to the
+    corresponding slice of :meth:`DenseDataPlane.from_key` with the same
+    key, so the plane choice changes the memory model, never the math.
+    Tiles are not cached — regeneration is a PRNG replay, which is cheaper
+    than keeping ``(N, M)`` alive.
+    """
+
+    def __init__(self, key, N: int, M: int, P: int, Q: int,
+                 flip_prob: float = 0.01):
+        self._init_grid(N, M, P, Q)
+        self._key = key
+        self._flip_prob = flip_prob
+
+    @classmethod
+    def from_key(cls, key, N: int, M: int, P: int, Q: int,
+                 flip_prob: float = 0.01) -> "TiledDataPlane":
+        return cls(key, N, M, P, Q, flip_prob=flip_prob)
+
+    def x_tile(self, p: int, q: int):
+        if not (0 <= p < self.P and 0 <= q < self.Q):
+            raise IndexError(f"tile ({p}, {q}) outside grid "
+                             f"({self.P}, {self.Q})")
+        return synthetic.svm_tile_x(self._key, p, q, self.n, self.m)
+
+    def y_block(self, p: int):
+        if not 0 <= p < self.P:
+            raise IndexError(f"row block {p} outside grid P={self.P}")
+        return synthetic.svm_label_block(self._key, p, self.n, self.Q,
+                                         self.m, flip_prob=self._flip_prob)
+
+
+def as_data_plane(data) -> DataPlane:
+    """Coerce `data` to a DataPlane.
+
+    Accepts a plane (returned as-is) or a raw ``(X, y)`` pair (wrapped in a
+    trivial-grid :class:`DenseDataPlane`) — the compatibility shim that
+    lets every run entry point take either.
+    """
+    if isinstance(data, DataPlane):
+        return data
+    if isinstance(data, (tuple, list)) and len(data) == 2:
+        return DenseDataPlane(data[0], data[1])
+    raise TypeError(
+        f"expected a DataPlane or an (X, y) pair, got {type(data).__name__}")

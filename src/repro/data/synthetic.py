@@ -4,11 +4,32 @@ x_i ~ U[-1, 1]^M and a planted separator z ~ U[-1, 1]^M; labels
 y_i = sgn(x_i . z) with each sign flipped independently with prob 0.01.
 Data is dense and features are standardized to unit variance (paper: "the
 features are standardized to have unit variance").
+
+Two generation paths share this module:
+
+* :func:`make_svm_data` — the legacy host-global path: one ``(N, M)`` array,
+  standardized by the *empirical* per-column std. Kept for the seed tests
+  and small fixtures.
+* the **tile** functions (:func:`svm_tile_x`, :func:`svm_label_block`,
+  :func:`svm_feature_block_z`) — the canonical per-``(p, q)`` tile
+  generators behind ``repro.data.plane``. Every tile's randomness derives
+  from ``fold_in``-nested keys (``fold_in(fold_in(kx, p), q)``), so tile
+  ``(p, q)`` is bitwise-reproducible in isolation, on any host, regardless
+  of mesh shape — the property that lets the tiled data plane generate each
+  device's shard in place without ever materializing the global array.
+  Standardization on this path is *analytic*: U[-1, 1] has mean 0 and
+  std 1/sqrt(3) exactly, so unit variance is ``X * sqrt(3)`` — a per-tile
+  local operation (the empirical ``std(axis=0)`` would be a cross-tile
+  reduction over the whole column) that is also immune to the ``std == 0``
+  degeneracy of the empirical path by construction.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# exact unit-variance scale for U[-1, 1] (std = 1/sqrt(3)), in f32
+SVM_UNIT_VARIANCE_SCALE = jnp.float32(1.7320508075688772)
 
 
 def make_svm_data(key, N: int, M: int, flip_prob: float = 0.01, standardize: bool = True):
@@ -21,6 +42,67 @@ def make_svm_data(key, N: int, M: int, flip_prob: float = 0.01, standardize: boo
     flips = jax.random.bernoulli(kf, flip_prob, (N,))
     y = jnp.where(flips, -y, y)
     if standardize:
-        # U[-1,1] already has mean 0; scale to unit variance (std = 1/sqrt(3)).
-        X = X / jnp.std(X, axis=0, keepdims=True)
+        # U[-1,1] already has mean 0; scale to unit variance. The empirical
+        # std of a constant column is 0 — dividing by it poisons the whole
+        # feature with NaN/inf (it happens: N == 1 makes EVERY column
+        # constant), so degenerate columns are left unscaled instead.
+        std = jnp.std(X, axis=0, keepdims=True)
+        X = X / jnp.where(std > 0, std, 1.0)
     return X, y.astype(jnp.float32), z
+
+
+# ---------------------------------------------------------------------------
+# Per-tile generation: the canonical block-structured path of the data plane.
+# The (P, Q) tile grid is the paper's doubly-distributed partition — tile
+# (p, q) is exactly worker (p, q)'s resident block x^{p,q}.
+# ---------------------------------------------------------------------------
+def _tile_keys(key):
+    """The (kx, kz, kf) sub-keys every tile function derives from."""
+    return jax.random.split(key, 3)
+
+
+def svm_tile_x(key, p: int, q: int, n: int, m: int, standardize: bool = True):
+    """The (n, m) feature tile of worker (p, q), bitwise-reproducible.
+
+    The tile key is ``fold_in(fold_in(kx, p), q)`` — a pure function of the
+    base key and the tile coordinates, independent of how many other tiles
+    exist or where they live. Standardization is the analytic unit-variance
+    scale ``X * sqrt(3)`` (see module docstring).
+    """
+    kx, _, _ = _tile_keys(key)
+    kt = jax.random.fold_in(jax.random.fold_in(kx, p), q)
+    X = jax.random.uniform(kt, (n, m), minval=-1.0, maxval=1.0,
+                           dtype=jnp.float32)
+    if standardize:
+        X = X * SVM_UNIT_VARIANCE_SCALE
+    return X
+
+
+def svm_feature_block_z(key, q: int, m: int):
+    """Feature block q of the planted separator z ~ U[-1, 1]^M."""
+    _, kz, _ = _tile_keys(key)
+    return jax.random.uniform(jax.random.fold_in(kz, q), (m,), minval=-1.0,
+                              maxval=1.0, dtype=jnp.float32)
+
+
+def svm_label_block(key, p: int, n: int, Q: int, m: int,
+                    flip_prob: float = 0.01):
+    """The (n,) label block of observation partition p.
+
+    y_i = sgn(x_i . z) needs the full row, which spans Q feature tiles; the
+    partial inner products are accumulated in ascending-q order — the one
+    canonical reduction order — so the dense and tiled planes produce
+    bitwise-identical labels. Labels derive from the *raw* (unstandardized)
+    tiles, exactly like the legacy path; the analytic scale is a positive
+    constant, so it could not change a sign anyway. Sign flips draw from
+    ``fold_in(kf, p)`` — per observation partition, tile-grid independent.
+    """
+    zdot = jnp.zeros((n,), jnp.float32)
+    for q in range(Q):
+        zdot = zdot + svm_tile_x(key, p, q, n, m, standardize=False) \
+            @ svm_feature_block_z(key, q, m)
+    y = jnp.sign(zdot)
+    y = jnp.where(y == 0, 1.0, y)
+    _, _, kf = _tile_keys(key)
+    flips = jax.random.bernoulli(jax.random.fold_in(kf, p), flip_prob, (n,))
+    return jnp.where(flips, -y, y).astype(jnp.float32)

@@ -14,8 +14,8 @@ from repro.testing.devices import (DEFAULT_TEST_DEVICES,
                                    enable_compilation_cache,
                                    force_host_devices, require_host_devices,
                                    run_forced_subprocess, sodda_test_mesh)
-from repro.testing.fixtures import (CONFORMANCE_ITERS, make_problem,
-                                    medium_fixture_config,
+from repro.testing.fixtures import (CONFORMANCE_ITERS, make_data_plane,
+                                    make_problem, medium_fixture_config,
                                     small_fixture_config)
 from repro.testing.invariants import (assert_samples_equal,
                                       check_iteration_sample)
@@ -34,6 +34,7 @@ __all__ = [
     "CONFORMANCE_ITERS",
     "assert_samples_equal",
     "check_iteration_sample",
+    "make_data_plane",
     "make_problem",
     "small_fixture_config",
     "medium_fixture_config",

@@ -60,3 +60,16 @@ def make_problem(cfg: SoddaConfig, seed: int = 0):
     from repro.data.synthetic import make_svm_data
     X, y, _ = make_svm_data(jax.random.PRNGKey(seed), cfg.N, cfg.M)
     return X, y
+
+
+def make_data_plane(cfg: SoddaConfig, kind: str = "tiled", seed: int = 0):
+    """A registered data plane on `cfg`'s (P, Q) tile grid.
+
+    Both kinds built from the same key generate bitwise-identical data
+    (the dense↔tiled parity contract), so a test parametrized over kinds
+    exercises the *placement* paths, not different problems.
+    """
+    import jax
+    from repro.data.plane import make_plane
+    return make_plane(kind, jax.random.PRNGKey(seed), cfg.N, cfg.M,
+                      cfg.P, cfg.Q)

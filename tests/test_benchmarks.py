@@ -13,6 +13,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 bench_run = importlib.import_module("benchmarks.run")
 validate_bench = importlib.import_module("benchmarks.validate_bench")
+bench_trend = importlib.import_module("tools.bench_trend")
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +166,126 @@ def test_validate_cli_require_backend(tmp_path, capsys):
         [str(path), "--require-backend", "async-mesh"]) == 1
     assert "async-mesh" in capsys.readouterr().out
     assert validate_bench.main([str(path), "--require-backend"]) == 2
+
+
+def test_bench_driver_preserves_large_problem_block(monkeypatch, tmp_path):
+    """Regenerating the per-backend cells must not drop the (separately
+    produced, expensive) large_problem block from an existing artifact."""
+    import json
+    monkeypatch.setattr(bench_run, "_resolve_driver_backends",
+                        lambda cfg: (["reference"], False))
+    out = tmp_path / "b.json"
+    out.write_text(json.dumps({"schema": "bench_sodda/v1",
+                               "large_problem": _valid_large_problem()}))
+    payload = bench_run.bench_driver(iters=2, reps=1, out_path=str(out))
+    assert payload["large_problem"] == _valid_large_problem()
+    assert json.loads(out.read_text())["large_problem"] == \
+        _valid_large_problem()
+
+
+def _valid_large_problem():
+    return {
+        "problem": {"name": "sodda-table1-50kx6k", "P": 5, "Q": 3,
+                    "N": 50_000, "M": 6_000, "L": 64, "loss": "hinge"},
+        "backend": "shard_map", "plane": "tiled", "iters": 4,
+        "us_per_iter": 5e6, "final_loss": 0.4,
+        "peak_host_bytes": 4.0e7, "rss_peak_bytes": 3.0e9,
+        "dense_xy_bytes": 1.2002e9,
+    }
+
+
+def test_schema_accepts_large_problem_block():
+    payload = _valid_payload()
+    payload["large_problem"] = _valid_large_problem()
+    assert validate_bench.validate(payload)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda lp: lp.update(plane="dense"), "plane"),
+    (lambda lp: lp.update(iters=0), "iters"),
+    (lambda lp: lp.update(us_per_iter=0), "us_per_iter"),
+    (lambda lp: lp.update(peak_host_bytes=-1), "peak_host_bytes"),
+    (lambda lp: lp.pop("final_loss"), "final_loss"),
+    (lambda lp: lp["problem"].pop("N"), "problem.N"),
+    # the acceptance criterion itself: host staging must undercut dense
+    (lambda lp: lp.update(peak_host_bytes=2e9), "below the dense"),
+])
+def test_schema_rejects_large_problem_violations(mutate, match):
+    payload = _valid_payload()
+    payload["large_problem"] = _valid_large_problem()
+    mutate(payload["large_problem"])
+    with pytest.raises(validate_bench.BenchSchemaError, match=match):
+        validate_bench.validate(payload)
+
+
+# ---------------------------------------------------------------------------
+# tools/bench_trend.py: the us/iter regression gate between two artifacts.
+# ---------------------------------------------------------------------------
+def _write(tmp_path, name, payload):
+    import json
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_bench_trend_ok_and_regression(tmp_path, capsys):
+    base = _valid_payload()
+    cur = copy.deepcopy(base)
+    # +20% is inside the default 25% gate
+    cur["backends"]["reference"]["scan_driver"]["us_per_iter"] = 3.6
+    b, c = _write(tmp_path, "b.json", base), _write(tmp_path, "c.json", cur)
+    assert bench_trend.main([b, c]) == 0
+    # +50% trips it
+    cur["backends"]["reference"]["scan_driver"]["us_per_iter"] = 4.5
+    c = _write(tmp_path, "c2.json", cur)
+    assert bench_trend.main([b, c]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+    # ... unless the threshold is raised
+    assert bench_trend.main([b, c, "--threshold", "0.6"]) == 0
+    # improvements never fail
+    cur["backends"]["reference"]["scan_driver"]["us_per_iter"] = 0.5
+    assert bench_trend.main([b, _write(tmp_path, "c3.json", cur)]) == 0
+
+
+def test_bench_trend_new_and_dropped_backends_do_not_fail(tmp_path, capsys):
+    base = _valid_payload()
+    cur = copy.deepcopy(base)
+    cur["backends"]["experimental"] = copy.deepcopy(
+        cur["backends"]["reference"])
+    del cur["backends"]["reference"]
+    code = bench_trend.main([_write(tmp_path, "b.json", base),
+                             _write(tmp_path, "c.json", cur)])
+    out = capsys.readouterr().out
+    assert code == 0
+    assert "new" in out and "dropped" in out
+
+
+def test_bench_trend_incomparable_artifacts(tmp_path, capsys):
+    base = _valid_payload()
+    cur = copy.deepcopy(base)
+    cur["iters"] = 99  # a different measurement regime, not a trend
+    assert bench_trend.main([_write(tmp_path, "b.json", base),
+                             _write(tmp_path, "c.json", cur)]) == 3
+    assert "INCOMPARABLE" in capsys.readouterr().out
+    cur = copy.deepcopy(base)
+    cur["problem"]["M"] = 64
+    assert bench_trend.main([_write(tmp_path, "b.json", base),
+                             _write(tmp_path, "c2.json", cur)]) == 3
+
+
+def test_bench_trend_usage_errors(tmp_path):
+    b = _write(tmp_path, "b.json", _valid_payload())
+    assert bench_trend.main([b]) == 2  # missing current
+    assert bench_trend.main([b, str(tmp_path / "missing.json")]) == 2
+    assert bench_trend.main([b, b, "--threshold", "-1"]) == 2
+    broken = tmp_path / "broken.json"
+    broken.write_text("{not json")
+    assert bench_trend.main([b, str(broken)]) == 2
+
+
+def test_bench_trend_identical_artifacts_pass(tmp_path):
+    b = _write(tmp_path, "b.json", _valid_payload())
+    assert bench_trend.main([b, b]) == 0
 
 
 @pytest.mark.slow

@@ -18,11 +18,13 @@ import pytest
 from repro.core import driver, engine, losses
 from repro.testing import (BITWISE, CONFORMANCE_ITERS, F32_REDUCTION,
                            QUANTIZED, STALENESS, assert_objectives_close,
-                           assert_trajectories_close, make_problem,
-                           small_fixture_config, sodda_test_mesh)
+                           assert_trajectories_close, make_data_plane,
+                           make_problem, small_fixture_config,
+                           sodda_test_mesh)
 
 LOSSES = tuple(losses.LOSSES)  # hinge, logistic, squared
 LRS = ("diminishing", "constant")
+PLANES = ("dense", "tiled")  # every matrix cell runs with both data planes
 _DISTRIBUTED = engine.MESH_BACKENDS  # backends whose cells need the mesh
 
 
@@ -72,6 +74,23 @@ def mesh():
     return sodda_test_mesh(small_fixture_config())
 
 
+@pytest.fixture(scope="module")
+def planes():
+    """The matrix's data planes — dense and tiled from the same key.
+
+    Their materializations are bitwise-identical by the plane contract
+    (asserted here once), so parametrizing the matrix over them exercises
+    the *placement* paths against one set of reference trajectories.
+    """
+    cfg = small_fixture_config()
+    built = {kind: make_data_plane(cfg, kind) for kind in PLANES}
+    Xd, yd = built["dense"].materialize()
+    Xt, yt = built["tiled"].materialize()
+    np.testing.assert_array_equal(np.asarray(Xd), np.asarray(Xt))
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(yt))
+    return built
+
+
 def _run_trajectory(step, cfg, X, y):
     state = engine.init_state(jax.random.PRNGKey(1), cfg.M)
     ws = [np.asarray(state.w)]
@@ -99,22 +118,46 @@ def reference(problem):
     return get
 
 
+@pytest.fixture(scope="module")
+def plane_reference(planes):
+    """Reference trajectories on the planes' (shared, bitwise-equal) data."""
+    cache = {}
+
+    def get(loss, lr):
+        if (loss, lr) not in cache:
+            cfg = _cfg(loss, lr)
+            X, y = planes["dense"].materialize()
+            ws = _run_trajectory(engine.make_step(cfg, "reference"), cfg, X, y)
+            objs = [float(losses.objective(loss, X, y, jnp.asarray(w)))
+                    for w in (ws[0], ws[-1])]
+            cache[(loss, lr)] = (ws, objs[0], objs[1])
+        return cache[(loss, lr)]
+
+    return get
+
+
+@pytest.mark.parametrize("plane_kind", PLANES)
 @pytest.mark.parametrize("backend,loss,lr,policy,opts", CELLS)
-def test_backend_parity(backend, loss, lr, policy, opts, problem, reference,
-                        request):
+def test_backend_parity(backend, loss, lr, policy, opts, plane_kind, planes,
+                        plane_reference, request):
     cfg = _cfg(loss, lr)
-    X, y = problem
-    ref_ws, obj0, obj_ref = reference(loss, lr)
+    ref_ws, obj0, obj_ref = plane_reference(loss, lr)
 
     kwargs = dict(opts)
+    cell_mesh = None
     if backend in _DISTRIBUTED:
         # resolved lazily so mesh-free cells (reference/pallas) still run on
         # hosts that cannot provide the device grid
-        kwargs["mesh"] = request.getfixturevalue("mesh")
+        cell_mesh = request.getfixturevalue("mesh")
+        kwargs["mesh"] = cell_mesh
+    # the cell consumes the plane exactly as the driver would: placed by the
+    # plane for this backend (tiles device_put onto the mesh for the
+    # distributed cells) — placement must not change the math
+    X, y = planes[plane_kind].materialize_for(backend, mesh=cell_mesh)
     step = engine.make_step(cfg, backend, **kwargs)
     ws = _run_trajectory(step, cfg, X, y)
 
-    ctx = f"{backend}/{loss}/{lr}/{opts}"
+    ctx = f"{backend}/{loss}/{lr}/{opts}/{plane_kind}"
     assert_trajectories_close(ref_ws, ws, policy, ctx)
     obj = float(losses.objective(loss, X, y, jnp.asarray(ws[-1])))
     assert_objectives_close(obj_ref, obj, policy, ctx)
@@ -149,9 +192,9 @@ def test_async_converges_to_reference_optimum(loss, lr, problem):
     cfg = _cfg(loss, lr)
     X, y = problem
     key = jax.random.PRNGKey(1)
-    _, h_ref = driver.run(key, X, y, cfg, ASYNC_ITERS, "reference",
+    _, h_ref = driver.run(key, (X, y), cfg, ASYNC_ITERS, "reference",
                           record_every=ASYNC_ITERS)
-    _, h_async = driver.run(key, X, y, cfg, ASYNC_ITERS, "async",
+    _, h_async = driver.run(key, (X, y), cfg, ASYNC_ITERS, "async",
                             record_every=ASYNC_ITERS)
     ctx = f"async/{loss}/{lr}"
     assert_objectives_close(h_ref[-1][1], h_async[-1][1], STALENESS, ctx)
@@ -206,9 +249,9 @@ def test_async_mesh_converges_to_reference_optimum(loss, lr, problem, mesh):
     cfg = _cfg(loss, lr)
     X, y = problem
     key = jax.random.PRNGKey(1)
-    _, h_ref = driver.run(key, X, y, cfg, ASYNC_ITERS, "reference",
+    _, h_ref = driver.run(key, (X, y), cfg, ASYNC_ITERS, "reference",
                           record_every=ASYNC_ITERS)
-    _, h_am = driver.run(key, X, y, cfg, ASYNC_ITERS, "async-mesh",
+    _, h_am = driver.run(key, (X, y), cfg, ASYNC_ITERS, "async-mesh",
                          record_every=ASYNC_ITERS, mesh=mesh)
     ctx = f"async-mesh/{loss}/{lr}"
     assert_objectives_close(h_ref[-1][1], h_am[-1][1], STALENESS, ctx)
@@ -246,9 +289,9 @@ def test_async_mesh_matches_single_host_async(problem, mesh):
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
     key = jax.random.PRNGKey(1)
-    s_host, h_host = driver.run(key, X, y, cfg, ASYNC_ITERS, "async",
+    s_host, h_host = driver.run(key, (X, y), cfg, ASYNC_ITERS, "async",
                                 record_every=ASYNC_ITERS)
-    s_mesh, h_mesh = driver.run(key, X, y, cfg, ASYNC_ITERS, "async-mesh",
+    s_mesh, h_mesh = driver.run(key, (X, y), cfg, ASYNC_ITERS, "async-mesh",
                                 record_every=ASYNC_ITERS, mesh=mesh)
     assert_trajectories_close([np.asarray(s_host.w)], [np.asarray(s_mesh.w)],
                               F32_REDUCTION, "async-mesh-vs-async/final-w")
@@ -303,9 +346,9 @@ def test_driver_matches_python_loop(backend, problem, request):
     X, y = problem
     kw = _driver_kwargs(backend, request)
     key = jax.random.PRNGKey(1)
-    s_scan, h_scan = driver.run(key, X, y, cfg, CONFORMANCE_ITERS, backend,
+    s_scan, h_scan = driver.run(key, (X, y), cfg, CONFORMANCE_ITERS, backend,
                                 record_every=2, **kw)
-    s_loop, h_loop = driver.run_python_loop(key, X, y, cfg, CONFORMANCE_ITERS,
+    s_loop, h_loop = driver.run_python_loop(key, (X, y), cfg, CONFORMANCE_ITERS,
                                             backend, record_every=2, **kw)
     assert [t for t, _ in h_scan] == [t for t, _ in h_loop]
     for (t, f_loop), (_, f_scan) in zip(h_loop, h_scan):
@@ -314,6 +357,48 @@ def test_driver_matches_python_loop(backend, problem, request):
     assert_trajectories_close([np.asarray(s_loop.w)], [np.asarray(s_scan.w)],
                               F32_REDUCTION, f"driver/{backend}/final-w")
     assert int(s_scan.t) == int(s_loop.t) == CONFORMANCE_ITERS + 1
+
+
+@pytest.mark.parametrize("backend", DRIVER_BACKENDS)
+def test_driver_plane_choice_is_bitwise_invariant(backend, request):
+    """The acceptance anchor of the data-plane refactor: for EVERY backend,
+    a run fed by the TiledDataPlane (per-tile generation, per-device
+    placement) is BITWISE the run fed by the DenseDataPlane built from the
+    same key — where a block lives is a data-plane decision that must never
+    leak into the math."""
+    cfg = _cfg("hinge", "diminishing")
+    kw = _driver_kwargs(backend, request)
+    key = jax.random.PRNGKey(1)
+    s_dense, h_dense = driver.run(key, make_data_plane(cfg, "dense"), cfg,
+                                  CONFORMANCE_ITERS, backend, **kw)
+    s_tiled, h_tiled = driver.run(key, make_data_plane(cfg, "tiled"), cfg,
+                                  CONFORMANCE_ITERS, backend, **kw)
+    assert h_dense == h_tiled, f"{backend}: recorded objectives diverged"
+    np.testing.assert_array_equal(np.asarray(s_dense.w),
+                                  np.asarray(s_tiled.w),
+                                  err_msg=f"{backend}: final iterate diverged")
+
+
+def test_driver_accepts_plane_and_tuple_identically(problem):
+    """as_data_plane coercion: a raw (X, y) pair and the DenseDataPlane
+    wrapping it drive bitwise-identical runs."""
+    cfg = _cfg("hinge", "diminishing")
+    X, y = problem
+    from repro.data.plane import DenseDataPlane
+    key = jax.random.PRNGKey(2)
+    s_pair, h_pair = driver.run(key, (X, y), cfg, 3)
+    s_plane, h_plane = driver.run(key, DenseDataPlane(X, y), cfg, 3)
+    assert h_pair == h_plane
+    np.testing.assert_array_equal(np.asarray(s_pair.w), np.asarray(s_plane.w))
+
+
+def test_driver_rejects_mismatched_plane(problem):
+    cfg = _cfg("hinge", "diminishing")
+    wrong = make_data_plane(small_fixture_config("logistic"), "tiled", seed=3)
+    import dataclasses as _dc
+    bigger = _dc.replace(cfg, n=cfg.n * 2)
+    with pytest.raises(ValueError, match="does not match cfg"):
+        driver.run(jax.random.PRNGKey(0), wrong, bigger, 1)
 
 
 @pytest.mark.parametrize("iters,record_every,want",
@@ -364,7 +449,7 @@ def test_driver_does_not_delete_caller_key(problem):
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
     key = jax.random.PRNGKey(7)
-    driver.run(key, X, y, cfg, 2)
+    driver.run(key, (X, y), cfg, 2)
     jnp.asarray(key) + 0  # raises RuntimeError if the buffer was donated
 
 
@@ -379,7 +464,7 @@ def test_driver_record_objective_false_is_pure_iteration(problem):
     silent = driver.make_run(cfg, 3, "reference", record_objective=False)
     s1, fs = silent(init_state(jnp.array(key, copy=True), cfg.M), X, y)
     assert fs.shape == (0,)
-    s2, _ = driver.run(key, X, y, cfg, 3)
+    s2, _ = driver.run(key, (X, y), cfg, 3)
     np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(s2.w))
 
 
@@ -423,8 +508,8 @@ def test_radisa_avg_run_matches_python_loop(problem):
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
     key = jax.random.PRNGKey(3)
-    _, h_eng = engine.run(key, X, y, cfg, iters=4, backend="radisa-avg")
-    _, h_loop = driver.run_python_loop(key, X, y, cfg, 4, "radisa-avg")
+    _, h_eng = engine.run(key, (X, y), cfg, iters=4, backend="radisa-avg")
+    _, h_loop = driver.run_python_loop(key, (X, y), cfg, 4, "radisa-avg")
     assert [t for t, _ in h_eng] == [t for t, _ in h_loop]
     for (t, f_loop), (_, f_scan) in zip(h_loop, h_eng):
         assert_objectives_close(f_loop, f_scan, F32_REDUCTION,
@@ -466,11 +551,11 @@ def test_engine_run_records_history(problem, mesh):
     cfg = _cfg("hinge", "diminishing")
     X, y = problem
     key = jax.random.PRNGKey(1)
-    _, h_ref = engine.run(key, X, y, cfg, iters=4, backend="reference",
+    _, h_ref = engine.run(key, (X, y), cfg, iters=4, backend="reference",
                           record_every=2)
     assert [t for t, _ in h_ref] == [0, 2, 4]
     assert h_ref[-1][1] < h_ref[0][1]  # descended
-    _, h_sm = engine.run(key, X, y, cfg, iters=4, backend="shard_map",
+    _, h_sm = engine.run(key, (X, y), cfg, iters=4, backend="shard_map",
                          record_every=2, mesh=mesh, gather_deltas=False)
     np.testing.assert_allclose([v for _, v in h_sm], [v for _, v in h_ref],
                                rtol=1e-4)
@@ -484,6 +569,21 @@ def test_distributed_objective_matches_reference(backend, problem, mesh):
     f_dist = float(engine.make_objective(cfg, backend, mesh=mesh)(X, y, w))
     f_ref = float(engine.make_objective(cfg, "reference")(X, y, w))
     np.testing.assert_allclose(f_dist, f_ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["reference", "shard_map"])
+def test_make_objective_closes_over_plane(backend, problem, mesh):
+    """make_objective(data=...) binds the plane's placed arrays: the closed
+    F(w) equals F(X, y, w) on the materialized data, for single-host and
+    mesh placements alike."""
+    cfg = _cfg("hinge", "diminishing")
+    plane = make_data_plane(cfg, "tiled")
+    kw = {"mesh": mesh} if backend in _DISTRIBUTED else {}
+    w = jax.random.normal(jax.random.PRNGKey(6), (cfg.M,)) * 0.1
+    closed = engine.make_objective(cfg, backend, data=plane, **kw)
+    X, y = plane.materialize()
+    f_ref = float(engine.make_objective(cfg, "reference")(X, y, w))
+    np.testing.assert_allclose(float(closed(w)), f_ref, rtol=1e-5)
 
 
 def test_iteration_flops_consistent_across_engine():

@@ -1,0 +1,197 @@
+"""DataPlane unit tests: registry, tile parity (hypothesis-free fallback of
+the property in tests/test_property.py), placement, and the legacy
+generator's standardization guard."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.plane import (DataPlane, DenseDataPlane, TiledDataPlane,
+                              as_data_plane, available_planes, make_plane)
+from repro.data.synthetic import (SVM_UNIT_VARIANCE_SCALE, make_svm_data,
+                                  svm_tile_x)
+from repro.testing import small_fixture_config, sodda_test_mesh
+
+
+# ---------------------------------------------------------------------------
+# Registry / coercion
+# ---------------------------------------------------------------------------
+def test_registry_exposes_builtin_planes():
+    assert set(available_planes()) >= {"dense", "tiled"}
+    assert TiledDataPlane.plane_name == "tiled"
+    assert DenseDataPlane.plane_name == "dense"
+
+
+def test_make_plane_unknown_kind():
+    with pytest.raises(ValueError, match="unknown data plane"):
+        make_plane("sparse", jax.random.PRNGKey(0), 8, 8, 2, 2)
+
+
+def test_as_data_plane_coercion():
+    X = jnp.zeros((6, 4))
+    y = jnp.ones((6,))
+    plane = as_data_plane((X, y))
+    assert isinstance(plane, DenseDataPlane)
+    assert (plane.N, plane.M, plane.P, plane.Q) == (6, 4, 1, 1)
+    assert as_data_plane(plane) is plane
+    with pytest.raises(TypeError, match="DataPlane or an"):
+        as_data_plane(X)
+    with pytest.raises(ValueError, match=r"need X \(N, M\)"):
+        as_data_plane((X, jnp.ones((3,))))
+
+
+def test_plane_grid_must_divide_shape():
+    with pytest.raises(ValueError, match="must divide"):
+        TiledDataPlane(jax.random.PRNGKey(0), 10, 8, 3, 2)
+    with pytest.raises(ValueError, match="must divide"):
+        DenseDataPlane(jnp.zeros((10, 8)), jnp.zeros((10,)), grid=(2, 3))
+
+
+def test_tile_index_bounds():
+    plane = TiledDataPlane(jax.random.PRNGKey(0), 8, 8, 2, 2)
+    with pytest.raises(IndexError):
+        plane.x_tile(2, 0)
+    with pytest.raises(IndexError):
+        plane.y_block(-1)
+
+
+# ---------------------------------------------------------------------------
+# Dense <-> tiled parity (fallback of the hypothesis property) and the
+# generation scheme's invariants.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,M,P,Q", [(8, 6, 1, 1), (12, 8, 3, 2),
+                                     (160, 32, 2, 2), (30, 9, 5, 3)])
+def test_tiled_tiles_bitwise_equal_dense_slices(N, M, P, Q):
+    key = jax.random.PRNGKey(7)
+    dense = DenseDataPlane.from_key(key, N, M, P, Q)
+    tiled = TiledDataPlane(key, N, M, P, Q)
+    Xd, yd = dense.materialize()
+    for p in range(P):
+        np.testing.assert_array_equal(np.asarray(tiled.y_block(p)),
+                                      np.asarray(dense.y_block(p)))
+        for q in range(Q):
+            tile = np.asarray(tiled.x_tile(p, q))
+            np.testing.assert_array_equal(tile, np.asarray(dense.x_tile(p, q)))
+            n, m = tiled.n, tiled.m
+            np.testing.assert_array_equal(
+                tile, np.asarray(Xd)[p * n:(p + 1) * n, q * m:(q + 1) * m])
+    Xt, yt = tiled.materialize()
+    np.testing.assert_array_equal(np.asarray(Xd), np.asarray(Xt))
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(yt))
+
+
+def test_tile_generation_is_grid_local():
+    """Tile (p, q) only depends on (key, p, q) and its own shape — the same
+    tile drawn from planes with different grids is bitwise-identical, which
+    is what makes generation mesh-shape independent."""
+    key = jax.random.PRNGKey(3)
+    a = svm_tile_x(key, 1, 2, 8, 4)
+    b = TiledDataPlane(key, 16, 12, 2, 3).x_tile(1, 2)
+    c = TiledDataPlane(key, 32, 16, 4, 4).x_tile(1, 2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_analytic_standardization():
+    """Tiled tiles are the raw U[-1,1] draw scaled by exactly sqrt(3); the
+    empirical column std of a large sample approaches 1."""
+    key = jax.random.PRNGKey(11)
+    raw = svm_tile_x(key, 0, 0, 4096, 8, standardize=False)
+    std = svm_tile_x(key, 0, 0, 4096, 8)
+    np.testing.assert_array_equal(np.asarray(std),
+                                  np.asarray(raw * SVM_UNIT_VARIANCE_SCALE))
+    col_std = np.asarray(jnp.std(std, axis=0))
+    np.testing.assert_allclose(col_std, 1.0, atol=0.05)
+
+
+def test_labels_are_signs():
+    plane = TiledDataPlane(jax.random.PRNGKey(5), 64, 16, 4, 2)
+    for p in range(4):
+        y = np.asarray(plane.y_block(p))
+        assert set(np.unique(y)) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+def test_mesh_materialization_matches_and_is_sharded():
+    cfg = small_fixture_config()
+    mesh = sodda_test_mesh(cfg)
+    key = jax.random.PRNGKey(0)
+    dense = DenseDataPlane.from_key(key, cfg.N, cfg.M, cfg.P, cfg.Q)
+    tiled = TiledDataPlane(key, cfg.N, cfg.M, cfg.P, cfg.Q)
+    Xd, yd = dense.materialize_for("shard_map", mesh=mesh)
+    Xt, yt = tiled.materialize_for("shard_map", mesh=mesh)
+    from repro.core.distributed import data_shardings
+    xs, ys = data_shardings(mesh)
+    assert Xt.sharding == xs and yt.sharding == ys
+    assert Xd.sharding == xs and yd.sharding == ys
+    np.testing.assert_array_equal(np.asarray(Xd), np.asarray(Xt))
+    np.testing.assert_array_equal(np.asarray(yd), np.asarray(yt))
+    # every shard of the tiled X is exactly its worker's tile
+    for shard in Xt.addressable_shards:
+        rows, cols = shard.index
+        p, q = (rows.start or 0) // tiled.n, (cols.start or 0) // tiled.m
+        np.testing.assert_array_equal(np.asarray(shard.data),
+                                      np.asarray(tiled.x_tile(p, q)))
+
+
+def test_mesh_materialization_grid_mismatch_falls_back():
+    """A tiled plane whose grid differs from the mesh still places
+    correctly (assemble + re-split) but warns loudly: the fallback
+    materializes the full (N, M) array, voiding the tiled memory model."""
+    cfg = small_fixture_config()
+    mesh = sodda_test_mesh(cfg)  # 2x2
+    key = jax.random.PRNGKey(0)
+    native = TiledDataPlane(key, cfg.N, cfg.M, cfg.P, cfg.Q)
+    finer = TiledDataPlane(key, cfg.N, cfg.M, cfg.P * 2, cfg.Q * 2)
+    Xn, yn = native.materialize_for("shard_map", mesh=mesh)
+    with pytest.warns(UserWarning, match="falling back to assembling"):
+        Xf, yf = finer.materialize_for("shard_map", mesh=mesh)
+    assert Xf.sharding == Xn.sharding
+    # different grids generate different data (different tile keys) — only
+    # the placement contract is shared
+    assert Xf.shape == Xn.shape and yf.shape == yn.shape
+    # the matched-grid path stays silent
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        native.materialize_for("shard_map", mesh=mesh)
+
+
+def test_materialize_for_without_mesh_is_single_host():
+    plane = TiledDataPlane(jax.random.PRNGKey(1), 16, 8, 2, 2)
+    X, y = plane.materialize_for("reference")
+    assert X.shape == (16, 8) and y.shape == (16,)
+    Xm, ym = plane.materialize()
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(Xm))
+
+
+def test_dense_nbytes_metadata():
+    plane = TiledDataPlane(jax.random.PRNGKey(1), 100, 50, 2, 2)
+    assert plane.dense_nbytes == 4 * (100 * 50 + 100)
+    assert (plane.n, plane.m) == (50, 25)
+
+
+# ---------------------------------------------------------------------------
+# Legacy generator: the std == 0 hazard (satellite fix).
+# ---------------------------------------------------------------------------
+def test_make_svm_data_constant_column_does_not_nan():
+    """N=1 makes every column constant (std 0); the guarded path must leave
+    the feature unscaled instead of dividing it into NaN."""
+    X, y, _ = make_svm_data(jax.random.PRNGKey(0), 1, 8)
+    assert np.isfinite(np.asarray(X)).all()
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_make_svm_data_standardizes_nondegenerate_columns():
+    X, _, _ = make_svm_data(jax.random.PRNGKey(0), 512, 4)
+    np.testing.assert_allclose(np.asarray(jnp.std(X, axis=0)), 1.0,
+                               rtol=1e-5)
+
+
+def test_data_plane_is_abstract():
+    with pytest.raises(TypeError):
+        DataPlane()

@@ -20,13 +20,15 @@ def test_repo_docs_have_no_dangling_references():
 
 
 def test_docs_pages_exist_and_are_linked_from_readme():
-    for page in ("architecture.md", "backends.md", "benchmarks.md"):
+    for page in ("architecture.md", "backends.md", "benchmarks.md",
+                 "data.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
     assert "docs/architecture.md" in readme
     assert "docs/backends.md" in readme
     assert "docs/benchmarks.md" in readme
+    assert "docs/data.md" in readme
 
 
 # ---------------------------------------------------------------------------
@@ -76,6 +78,46 @@ def test_registry_drift_check_missing_catalog_page(tmp_path):
     assert len(errors) == 1 and "missing" in errors[0]
     # no engine source at all (foreign tree): nothing to check, no error
     assert check_docs.check_registry_documented(str(tmp_path / "docs")) == []
+
+
+# ---------------------------------------------------------------------------
+# Plane-registry↔docs drift: the DataPlane mirror of the backend check.
+# ---------------------------------------------------------------------------
+def test_registry_planes_scan_matches_runtime_registry():
+    from repro.data import plane
+    scanned = check_docs.registry_planes(os.path.abspath(ROOT))
+    assert scanned == sorted(plane.available_planes()), (
+        scanned, plane.available_planes())
+
+
+def test_every_registered_plane_is_documented():
+    errors = check_docs.check_planes_documented(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_plane_drift_check_flags_undocumented_plane(tmp_path):
+    data = tmp_path / "src" / "repro" / "data"
+    data.mkdir(parents=True)
+    (data / "plane.py").write_text(
+        '@register_plane("dense")\nclass A: ...\n'
+        "@register_plane('sparse-ghost')\nclass B: ...\n")
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "data.md").write_text("| `dense` | fine |\n")
+    errors = check_docs.check_planes_documented(str(tmp_path))
+    assert len(errors) == 1 and "`sparse-ghost`" in errors[0], errors
+    # rides along in check_tree, which is what CI runs
+    (tmp_path / "README.md").write_text("clean\n")
+    assert errors[0] in check_docs.check_tree(str(tmp_path))
+    # documenting the plane clears it
+    (docs / "data.md").write_text("`dense` and `sparse-ghost`\n")
+    assert check_docs.check_planes_documented(str(tmp_path)) == []
+    # missing catalog page with a non-empty registry is drift too
+    (docs / "data.md").unlink()
+    errors = check_docs.check_planes_documented(str(tmp_path))
+    assert len(errors) == 1 and "missing" in errors[0]
+    # foreign tree without the plane source: nothing to check
+    assert check_docs.check_planes_documented(str(tmp_path / "docs")) == []
 
 
 def test_checker_slug_rules():

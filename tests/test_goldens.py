@@ -36,7 +36,7 @@ PROBLEMS = [("svm_hinge_small", "hinge"), ("logistic_small", "logistic")]
 def _compute(loss):
     cfg = small_fixture_config(loss)
     X, y = make_problem(cfg)
-    state, hist = driver.run(jax.random.PRNGKey(SEED), X, y, cfg, ITERS,
+    state, hist = driver.run(jax.random.PRNGKey(SEED), (X, y), cfg, ITERS,
                              "reference", record_every=RECORD_EVERY)
     w = np.asarray(state.w, np.float64)
     return {

@@ -96,6 +96,57 @@ def test_sample_iteration_varies_with_t(seed):
 
 
 # ---------------------------------------------------------------------------
+# Data-plane parity: for ANY (N, M, P, Q) grid, every tile of a
+# TiledDataPlane is bitwise the corresponding slice of a DenseDataPlane
+# built from the same key, and tile generation is grid-local (a tile's bits
+# depend only on (key, p, q, n, m) — never on the mesh or grid shape). This
+# is the contract that lets the tiled plane generate each device's shard in
+# place without changing the math. (hypothesis-free fallback:
+# tests/test_data_plane.py, same checks on fixed grids.)
+# ---------------------------------------------------------------------------
+plane_grids = st.tuples(st.integers(1, 4), st.integers(1, 4),  # P, Q
+                        st.integers(1, 6),                     # n per tile
+                        st.integers(1, 6))                     # m per tile
+
+
+@given(st.integers(0, 2**31 - 1), plane_grids)
+def test_tiled_plane_tiles_bitwise_equal_dense_slices(seed, grid):
+    from repro.data.plane import DenseDataPlane, TiledDataPlane
+    P, Q, n, m = grid
+    N, M = P * n, Q * m
+    key = jax.random.PRNGKey(seed)
+    dense = DenseDataPlane.from_key(key, N, M, P, Q)
+    tiled = TiledDataPlane(key, N, M, P, Q)
+    Xd, yd = dense.materialize()
+    Xd, yd = np.asarray(Xd), np.asarray(yd)
+    for p in range(P):
+        np.testing.assert_array_equal(np.asarray(tiled.y_block(p)),
+                                      yd[p * n:(p + 1) * n])
+        for q in range(Q):
+            np.testing.assert_array_equal(
+                np.asarray(tiled.x_tile(p, q)),
+                Xd[p * n:(p + 1) * n, q * m:(q + 1) * m])
+
+
+@given(st.integers(0, 2**31 - 1), plane_grids, plane_grids)
+def test_tile_generation_is_grid_independent(seed, grid_a, grid_b):
+    """The SAME (p, q) tile drawn from planes with two DIFFERENT grids is
+    bitwise-identical (tile shape held fixed) — generation never reads the
+    grid shape, so a mesh reshape cannot silently resample the feature
+    data. (Labels are the documented exception: y_block needs the full row,
+    hence all Q feature blocks.)"""
+    from repro.data.plane import TiledDataPlane
+    Pa, Qa, n, m = grid_a
+    Pb, Qb, _, _ = grid_b
+    key = jax.random.PRNGKey(seed)
+    plane_a = TiledDataPlane(key, Pa * n, Qa * m, Pa, Qa)
+    plane_b = TiledDataPlane(key, Pb * n, Qb * m, Pb, Qb)
+    p, q = min(Pa, Pb) - 1, min(Qa, Qb) - 1
+    np.testing.assert_array_equal(np.asarray(plane_a.x_tile(p, q)),
+                                  np.asarray(plane_b.x_tile(p, q)))
+
+
+# ---------------------------------------------------------------------------
 # make_local_halves invariant: composing the issue/consume halves with
 # staleness=0 (consume reads the buffer just issued) must be bitwise the
 # synchronous make_distributed_step, for ANY iterate, key, and iteration

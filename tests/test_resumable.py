@@ -1,0 +1,207 @@
+"""driver.run_resumable: checkpointed segment driver (ROADMAP "Driver-level
+checkpointing", host-side). The load-bearing claim: a run that is killed
+between segments and later resumed produces the BITWISE-identical
+trajectory of an uninterrupted run — and the segmented schedule itself is
+bitwise the one-dispatch scan driver, for every backend including the
+extended-carry (async) ones whose exchange buffer must survive the
+segment boundary."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.core import driver
+from repro.testing import make_data_plane, small_fixture_config, \
+    sodda_test_mesh
+
+ITERS, SEGMENT, RECORD = 10, 4, 2
+BACKENDS = ("reference", "async", "shard_map", "async-mesh")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return small_fixture_config()
+
+
+@pytest.fixture(scope="module")
+def plane(cfg):
+    return make_data_plane(cfg, "tiled")
+
+
+def _kwargs(backend, cfg, request):
+    from repro.core import engine
+    if backend in engine.MESH_BACKENDS:
+        return {"mesh": sodda_test_mesh(cfg)}
+    return {}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_and_resume_is_bitwise(backend, cfg, plane, tmp_path, request):
+    """Preempt after the second segment save; the resumed run must restore
+    the carry from disk and complete with the exact final state and history
+    of a run that was never interrupted."""
+    kw = _kwargs(backend, cfg, request)
+    key = jax.random.PRNGKey(1)
+
+    killed_at = []
+
+    def preempt(done):
+        killed_at.append(done)
+        if done == 2 * SEGMENT:
+            raise RuntimeError("injected preemption")
+
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected preemption"):
+        driver.run_resumable(key, plane, cfg, ITERS, backend,
+                             checkpoint_dir=d, segment_iters=SEGMENT,
+                             record_every=RECORD, on_segment=preempt, **kw)
+    assert latest_step(d) == 2 * SEGMENT  # the kill landed after the save
+
+    s_res, h_res = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                        checkpoint_dir=d,
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD, **kw)
+    s_full, h_full = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD, **kw)
+    assert h_res == h_full, f"{backend}: resumed history diverged"
+    np.testing.assert_array_equal(
+        np.asarray(s_res.w), np.asarray(s_full.w),
+        err_msg=f"{backend}: resumed final iterate diverged")
+    assert int(s_res.t) == int(s_full.t) == ITERS + 1
+    assert not hasattr(s_res, "mu")  # finalize stripped any extended carry
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_segmented_matches_one_dispatch_run(backend, cfg, plane, tmp_path,
+                                            request):
+    """The segment schedule is an implementation detail: N segments of the
+    carry-level program compose bitwise into driver.run's single dispatch
+    (the async warm-up runs jitted for exactly this reason)."""
+    kw = _kwargs(backend, cfg, request)
+    key = jax.random.PRNGKey(1)
+    s_seg, h_seg = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                        checkpoint_dir=str(tmp_path / "c"),
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD, **kw)
+    s_one, h_one = driver.run(key, plane, cfg, ITERS, backend,
+                              record_every=RECORD, **kw)
+    assert h_seg == h_one
+    np.testing.assert_array_equal(np.asarray(s_seg.w), np.asarray(s_one.w))
+
+
+def test_resume_of_completed_run_recomputes_nothing(cfg, plane, tmp_path):
+    """iters a multiple of segment_iters: the final carry is checkpointed,
+    so a rerun restores it and only re-evaluates the final objective."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(2)
+    s1, h1 = driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                                  segment_iters=4, record_every=2)
+    assert latest_step(d) == 8
+    calls = []
+    s2, h2 = driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                                  segment_iters=4, record_every=2,
+                                  on_segment=calls.append)
+    assert calls == []  # no segment ran on resume-from-complete
+    assert h1 == h2
+    np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(s2.w))
+
+
+def test_history_ticks_match_record_ticks(cfg, plane, tmp_path):
+    """Segment boundaries must not perturb the recording cadence, tail
+    segment included."""
+    _, hist = driver.run_resumable(jax.random.PRNGKey(3), plane, cfg, 7,
+                                   checkpoint_dir=str(tmp_path / "c"),
+                                   segment_iters=3, record_every=3)
+    assert [t for t, _ in hist] == list(driver.record_ticks(7, 3))
+
+
+def test_run_resumable_validates_arguments(cfg, plane, tmp_path):
+    key = jax.random.PRNGKey(0)
+    d = str(tmp_path / "c")
+    with pytest.raises(ValueError, match="segment_iters"):
+        driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                             segment_iters=0)
+    with pytest.raises(ValueError, match="multiple of"):
+        driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                             segment_iters=3, record_every=2)
+    driver.run_resumable(key, plane, cfg, 6, checkpoint_dir=d,
+                         segment_iters=3)
+    with pytest.raises(ValueError, match="beyond the requested"):
+        driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                             segment_iters=2)
+
+
+def test_resume_refuses_changed_parameters(cfg, plane, tmp_path):
+    """A checkpoint resumed under a different record_every or backend would
+    silently splice a mixed-cadence (or different-algorithm) history —
+    refused with a ValueError instead."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(4)
+    driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4, record_every=4)
+    with pytest.raises(ValueError, match="record_every"):
+        driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4, record_every=2)
+    with pytest.raises(ValueError, match="backend"):
+        driver.run_resumable(key, plane, cfg, 8, "async", checkpoint_dir=d,
+                             segment_iters=4, record_every=4)
+    # a changed segmentation would strand `done` off the save cadence
+    # (maybe_save gated on done % segment_iters) — refused too
+    with pytest.raises(ValueError, match="segment_iters"):
+        driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=8, record_every=4)
+    # the original parameters still resume fine
+    s, hist = driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                                   segment_iters=4, record_every=4)
+    assert [t for t, _ in hist] == [0, 4, 8]
+    assert int(s.t) == 9
+
+
+def test_resume_refuses_changed_engine_options(cfg, plane, tmp_path):
+    """Engine options are part of the algorithm: resuming an async run with
+    a different staleness would continue a different schedule — refused."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(5)
+    driver.run_resumable(key, plane, cfg, 4, "async", checkpoint_dir=d,
+                         segment_iters=4, staleness=1)
+    with pytest.raises(ValueError, match="options"):
+        driver.run_resumable(key, plane, cfg, 8, "async", checkpoint_dir=d,
+                             segment_iters=4, staleness=0)
+    s, hist = driver.run_resumable(key, plane, cfg, 8, "async",
+                                   checkpoint_dir=d, segment_iters=4,
+                                   staleness=1)
+    assert int(s.t) == 9 and hist[-1][0] == 8
+
+
+def test_resume_refuses_changed_key(cfg, plane, tmp_path):
+    """The restored carry holds the RNG state, so resuming under a new seed
+    would return the old seed's trajectory relabeled — refused."""
+    d = str(tmp_path / "c")
+    driver.run_resumable(jax.random.PRNGKey(1), plane, cfg, 4,
+                         checkpoint_dir=d, segment_iters=4)
+    with pytest.raises(ValueError, match="key"):
+        driver.run_resumable(jax.random.PRNGKey(2), plane, cfg, 8,
+                             checkpoint_dir=d, segment_iters=4)
+
+
+def test_resume_refuses_different_data(cfg, plane, tmp_path):
+    """Same-shaped but different data (another generation key) must not
+    silently continue a checkpointed trajectory — the fingerprint stamp
+    catches it."""
+    from repro.testing import make_data_plane
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(6)
+    driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4)
+    other = make_data_plane(cfg, "tiled", seed=123)
+    with pytest.raises(ValueError, match="data"):
+        driver.run_resumable(key, other, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4)
+    # the dense plane built from the SAME key is the same data (bitwise) —
+    # the fingerprint admits it
+    dense = make_data_plane(cfg, "dense")
+    s, hist = driver.run_resumable(key, dense, cfg, 8, checkpoint_dir=d,
+                                   segment_iters=4)
+    assert int(s.t) == 9 and hist[-1][0] == 8

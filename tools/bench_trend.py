@@ -1,0 +1,123 @@
+"""Bench trend gate: diff two BENCH_sodda.json files, fail on regression.
+
+Compares the per-backend scan-driver ``us_per_iter`` of a freshly generated
+``results/BENCH_sodda.json`` against a baseline (normally the committed one)
+and fails when any backend regressed by more than ``--threshold`` (default
+0.25 = 25%). The CI bench-smoke job runs this after regenerating the
+artifact, so a PR that slows a hot path down fails loudly instead of
+silently shifting the committed numbers.
+
+Pure stdlib (json only) — runnable in the dependency-free CI jobs.
+
+    python tools/bench_trend.py results_baseline.json results/BENCH_sodda.json
+    python tools/bench_trend.py base.json new.json --threshold 0.5
+
+Exit codes (documented in docs/benchmarks.md):
+
+    0  no backend regressed beyond the threshold (new/dropped backends are
+       reported but never fail — they appear and retire across PRs)
+    1  at least one backend's scan us/iter regressed beyond the threshold
+    2  usage error (bad arguments, unreadable/invalid file)
+    3  incomparable artifacts: schema, problem, or iteration count differ —
+       a trend over different measurements is meaningless, so the gate
+       refuses rather than passes
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_METRIC = ("scan_driver", "us_per_iter")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def comparable(baseline: dict, current: dict):
+    """None when the artifacts measure the same thing, else the reason."""
+    for key in ("schema", "problem", "iters"):
+        if baseline.get(key) != current.get(key):
+            return (f"{key} differs: baseline={baseline.get(key)!r} "
+                    f"current={current.get(key)!r}")
+    return None
+
+
+def diff(baseline: dict, current: dict, threshold: float):
+    """Per-backend comparison rows: (backend, base_us, cur_us, ratio, verdict).
+
+    ratio is current/baseline; verdict is 'ok', 'REGRESSED', 'new', or
+    'dropped'. Only 'REGRESSED' rows fail the gate.
+    """
+    rows = []
+    base_b = baseline.get("backends", {})
+    cur_b = current.get("backends", {})
+    for name in sorted(set(base_b) | set(cur_b)):
+        if name not in cur_b:
+            rows.append((name, _metric(base_b[name]), None, None, "dropped"))
+            continue
+        if name not in base_b:
+            rows.append((name, None, _metric(cur_b[name]), None, "new"))
+            continue
+        b, c = _metric(base_b[name]), _metric(cur_b[name])
+        ratio = c / b
+        verdict = "REGRESSED" if ratio > 1.0 + threshold else "ok"
+        rows.append((name, b, c, ratio, verdict))
+    return rows
+
+
+def _metric(cell: dict) -> float:
+    return float(cell[_METRIC[0]][_METRIC[1]])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail on >threshold us/iter regression vs a baseline "
+                    "BENCH_sodda.json")
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional us/iter growth per backend "
+                         "(default 0.25 = 25%%)")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit:
+        return 2
+    if args.threshold < 0:
+        print(f"threshold must be >= 0, got {args.threshold}")
+        return 2
+    try:
+        baseline, current = load(args.baseline), load(args.current)
+        reason = comparable(baseline, current)
+        if reason:
+            print(f"INCOMPARABLE: {reason}")
+            return 3
+        rows = diff(baseline, current, args.threshold)
+    except (OSError, ValueError, KeyError, TypeError,
+            ZeroDivisionError) as e:
+        # ZeroDivisionError: a corrupted baseline with us_per_iter == 0 is a
+        # malformed artifact (usage error), not a perf regression
+        print(f"ERROR: {type(e).__name__}: {e}")
+        return 2
+
+    failed = False
+    print(f"{'backend':<20} {'base us/it':>12} {'cur us/it':>12} "
+          f"{'ratio':>7}  verdict")
+    for name, b, c, ratio, verdict in rows:
+        failed |= verdict == "REGRESSED"
+        print(f"{name:<20} {_fmt(b):>12} {_fmt(c):>12} "
+              f"{_fmt(ratio, '.2f'):>7}  {verdict}")
+    status = "FAIL" if failed else "OK"
+    print(f"{status}: threshold +{args.threshold:.0%} on "
+          f"{_METRIC[0]}.{_METRIC[1]}, {len(rows)} backends compared")
+    return 1 if failed else 0
+
+
+def _fmt(v, spec=".1f"):
+    return "-" if v is None else format(v, spec)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

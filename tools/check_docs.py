@@ -13,12 +13,14 @@ silently-broken documentation behind:
     ``repro.core.driver.make_run``) — some prefix of at least two components
     must resolve to a module or package under ``src/``.
 
-It also checks the reverse direction for the engine registry: every backend
+It also checks the reverse direction for two registries: every backend
 registered in ``src/repro/core/engine.py`` must appear (backticked) in the
-``docs/backends.md`` catalog, so a new backend cannot land undocumented.
-The registry is read by scanning the source for ``@register_backend("...")``
-decorations — pure stdlib, no jax import — so the CI docs job stays
-dependency-free.
+``docs/backends.md`` catalog, and every data plane registered in
+``src/repro/data/plane.py`` must appear in ``docs/data.md`` — so neither a
+new backend nor a new DataPlane implementation can land undocumented. The
+registries are read by scanning the sources for the
+``@register_backend("...")`` / ``@register_plane("...")`` decorations —
+pure stdlib, no jax import — so the CI docs job stays dependency-free.
 
 Exit status 0 when clean, 1 with one line per dangling reference:
 
@@ -175,11 +177,47 @@ def check_registry_documented(root: str):
             for b in backends if f"`{b}`" not in text]
 
 
+_PLANE_SRC = os.path.join("src", "repro", "data", "plane.py")
+_DATA_DOC = os.path.join("docs", "data.md")
+_REGISTER_PLANE_RE = re.compile(r"register_plane\(\s*['\"]([^'\"]+)['\"]")
+
+
+def registry_planes(root: str):
+    """DataPlane names registered in ``src/repro/data/plane.py``, by static
+    scan of the ``@register_plane("...")`` decorations — the dependency-free
+    stand-in for ``repro.data.plane.available_planes()`` (pinned against it
+    in ``tests/test_docs.py``)."""
+    path = os.path.join(root, _PLANE_SRC)
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        return sorted(set(_REGISTER_PLANE_RE.findall(f.read())))
+
+
+def check_planes_documented(root: str):
+    """Plane-registry↔docs drift: every registered DataPlane implementation
+    must appear backticked in ``docs/data.md`` — the mirror of the backend
+    check above, with the same one-directional rationale."""
+    planes = registry_planes(root)
+    doc_path = os.path.join(root, _DATA_DOC)
+    if not planes:
+        return []
+    if not os.path.isfile(doc_path):
+        return [f"{_DATA_DOC}: missing, but the data layer registers "
+                f"{len(planes)} planes"]
+    with open(doc_path) as f:
+        text = f.read()
+    return [f"{_DATA_DOC}: registered data plane `{p}` has no entry "
+            "(registry↔docs drift)"
+            for p in planes if f"`{p}`" not in text]
+
+
 def check_tree(root: str):
     errors = []
     for md in _md_files(root):
         errors.extend(check_file(md, root))
     errors.extend(check_registry_documented(root))
+    errors.extend(check_planes_documented(root))
     return errors
 
 
@@ -194,8 +232,10 @@ def main(argv=None) -> int:
         print(e)
     n = len(list(_md_files(root)))
     nb = len(registry_backends(root))
+    np_ = len(registry_planes(root))
     print(f"{'FAIL' if errors else 'OK'}: {n} markdown files + {nb} "
-          f"registered backends checked, {len(errors)} dangling references")
+          f"registered backends + {np_} registered data planes checked, "
+          f"{len(errors)} dangling references")
     return 1 if errors else 0
 
 
