@@ -15,12 +15,45 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import zlib
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+# A well-formed checkpoint entry. Anything else under the directory — editor
+# backups ("step_0000000100.bak"), stray "step_foo" dirs, in-flight
+# "step_*.tmp" trees — is not a checkpoint and must never brick restore or
+# GC (int(name[5:]) used to raise ValueError on them).
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _step_entries(directory: str) -> List[Tuple[int, str]]:
+    """``(step, dirname)`` for every well-formed ``step_<N>`` entry, sorted
+    by step. Malformed names are skipped, not errors."""
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), name))
+    return sorted(out)
+
+
+def _committed(directory: str, name: str) -> bool:
+    return os.path.exists(os.path.join(directory, name, "_COMMITTED"))
+
+
+def _committed_path(directory: str, step: int) -> str:
+    """The directory of the committed checkpoint at `step`, or
+    FileNotFoundError — an uncommitted (crash-truncated) or absent step must
+    surface as 'no such checkpoint', not as a manifest parse error."""
+    for s, name in _step_entries(directory) if os.path.isdir(directory) else ():
+        if s == step and _committed(directory, name):
+            return os.path.join(directory, name)
+    raise FileNotFoundError(
+        f"no committed checkpoint at step {step} in {directory}")
 
 
 def _flatten(tree) -> dict:
@@ -65,11 +98,8 @@ def save_checkpoint(directory: str, step: int, tree, extra: Optional[dict] = Non
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = []
-    for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, "_COMMITTED")):
-                steps.append(int(name[5:]))
+    steps = [s for s, name in _step_entries(directory)
+             if _committed(directory, name)]
     return max(steps) if steps else None
 
 
@@ -85,7 +115,7 @@ def read_extra(directory: str, step: Optional[int] = None) -> Tuple[int, dict]:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
+    path = _committed_path(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     return manifest["step"], manifest.get("extra", {})
@@ -98,7 +128,7 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
+    path = _committed_path(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
@@ -118,11 +148,21 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
 
 
 def _gc(directory: str, keep: int):
-    steps = sorted(
-        int(n[5:]) for n in os.listdir(directory)
-        if n.startswith("step_") and not n.endswith(".tmp"))
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)
+    """Keep the newest `keep` *committed* checkpoints; collect every
+    well-formed step entry (committed or crash-truncated) strictly older
+    than the oldest kept one. Uncommitted leftovers never crowd a committed
+    checkpoint out of the keep budget, and malformed / in-flight ``.tmp``
+    entries are left alone entirely."""
+    if keep < 1:
+        return
+    entries = _step_entries(directory)
+    committed = sorted(s for s, name in entries if _committed(directory, name))
+    if len(committed) < keep:
+        return
+    cutoff = committed[-keep]
+    for s, name in entries:
+        if s < cutoff:
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
 class CheckpointManager:

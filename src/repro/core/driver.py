@@ -84,7 +84,7 @@ from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 
 __all__ = ["record_ticks", "make_run", "place_initial_state", "run",
-           "run_resumable", "run_python_loop"]
+           "run_resumable", "migrate_resumable", "run_python_loop"]
 
 
 def record_ticks(iters: int, record_every: int) -> Tuple[int, ...]:
@@ -365,10 +365,22 @@ def _data_fingerprint(plane) -> str:
     return h.hexdigest()
 
 
+def _validate_segmenting(iters: int, segment_iters: int, record_every: int):
+    record_ticks(iters, record_every)  # validate iters/record_every
+    if segment_iters < 1:
+        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
+    if segment_iters % record_every:
+        raise ValueError(
+            f"segment_iters ({segment_iters}) must be a multiple of "
+            f"record_every ({record_every}) so segment boundaries land on "
+            "recording ticks")
+
+
 def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                   backend: str = "reference", *, checkpoint_dir: str,
                   segment_iters: int, record_every: int = 1, mesh=None,
-                  keep: int = 3, on_segment=None, **options):
+                  keep: int = 3, on_segment=None, on_segment_start=None,
+                  **options):
     """:func:`run` split into checkpointed segments (ROADMAP "Driver-level
     checkpointing", the host-side version: chunk boundary = preemption
     point).
@@ -385,22 +397,21 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
 
     ``segment_iters`` must be a multiple of ``record_every`` so segment
     boundaries land on recording ticks. ``on_segment(iters_done)`` is an
-    optional host callback after each segment's save — the seam the
-    kill-and-resume test injects its preemption through. Returns the exact
+    optional host callback after each segment's save, and
+    ``on_segment_start(iters_done)`` fires before each segment's dispatch —
+    the two fault-injection seams: a kill in ``on_segment`` lands *after*
+    its boundary committed (a restart resumes past it), a kill in
+    ``on_segment_start`` lands *before* any new commit (a restart replays
+    the same segment — the no-progress path a restart budget must bound).
+    The segment supervisor (``repro.distributed.fault_tolerance``) also
+    times segments between the two seams. Returns the exact
     ``(final_state, [(t, F(w^t)) history])`` contract of :func:`run`.
     """
     from repro.checkpoint import CheckpointManager, latest_step, \
         read_extra, restore_checkpoint
     from repro.core.sodda import init_state
 
-    record_ticks(iters, record_every)  # validate iters/record_every
-    if segment_iters < 1:
-        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
-    if segment_iters % record_every:
-        raise ValueError(
-            f"segment_iters ({segment_iters}) must be a multiple of "
-            f"record_every ({record_every}) so segment boundaries land on "
-            "recording ticks")
+    _validate_segmenting(iters, segment_iters, record_every)
     from repro.data.plane import as_data_plane
 
     opt_key = tuple(sorted(options.items()))
@@ -455,6 +466,8 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
         hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
 
     while done < iters:
+        if on_segment_start is not None:
+            on_segment_start(done)
         seg = min(segment_iters, iters - done)
         compiled = _cached_segment_run(cfg, seg, backend, record_every, mesh,
                                        opt_key)
@@ -476,3 +489,50 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
     final = bundle.finalize(carry)
     hist.append((iters, float(_cached_objective(cfg.loss)(X, y, final.w))))
     return final, hist
+
+
+def migrate_resumable(key, data, cfg: SoddaConfig, done: int, state,
+                      backend: str = "reference", *, checkpoint_dir: str,
+                      segment_iters: int, record_every: int = 1, mesh=None,
+                      history=(), keep: int = 3, **options):
+    """Seed `checkpoint_dir` with a committed checkpoint at iteration `done`
+    carrying `state`, so :func:`run_resumable` continues it there as if the
+    run had always been its own — the elastic-rescale migration seam.
+
+    ``state`` is a plain ``SoddaState`` — P-independent by construction (the
+    ``(M,)`` iterate, the 1-based step counter, the base PRNG key), which is
+    exactly why a carry survives a topology change: the caller finalizes the
+    old grid's carry, rebuilds ``cfg``/``data``/``mesh`` for the new grid
+    (``repro.core.engine.rescale_bundle``), and this function re-runs the
+    backend's warm-up half on the *new* problem (an extended-carry backend
+    gets a fresh exchange buffer — the old one aggregated data that no
+    longer exists) and stamps the checkpoint with the new run's resume
+    guard. ``done`` must be a segment boundary so the shrunk run's save
+    cadence continues unbroken; ``history`` is the trajectory recorded so
+    far, spliced into the new run's checkpoint extra.
+    """
+    from repro.checkpoint import save_checkpoint
+    from repro.core.sodda import SoddaState
+    from repro.data.plane import as_data_plane
+
+    _validate_segmenting(max(done, 0), segment_iters, record_every)
+    if done < 0 or done % segment_iters:
+        raise ValueError(
+            f"migration point ({done}) must be a segment boundary "
+            f"(non-negative multiple of segment_iters={segment_iters})")
+    opt_key = tuple(sorted(options.items()))
+    plane = as_data_plane(data)
+    _, (X, y) = _placed_data(plane, cfg, backend, mesh, opt_key)
+    placed = place_initial_state(
+        SoddaState(w=state.w, t=state.t, key=state.key), cfg, backend, mesh)
+    carry = _cached_init_carry(cfg, backend, mesh, opt_key)(placed, X, y)
+    save_checkpoint(
+        checkpoint_dir, done, carry,
+        extra={"history": [[int(t), float(f)] for t, f in history],
+               "backend": backend, "record_every": record_every,
+               "segment_iters": segment_iters,
+               "options": [list(kv) for kv in opt_key],
+               "data": _data_fingerprint(plane),
+               "key": _key_stamp(key)},
+        keep=keep)
+    return carry

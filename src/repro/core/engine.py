@@ -74,6 +74,7 @@ __all__ = [
     "make_bundle",
     "make_objective",
     "make_mesh_for",
+    "rescale_bundle",
     "run",
     "init_state",
     "iteration_flops",
@@ -371,6 +372,35 @@ def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
         bundle = bundle._replace(
             place_data=functools.partial(_place_data, backend, data_mesh))
     return bundle
+
+
+def rescale_bundle(cfg: SoddaConfig, backend: str, new_P: int, **options):
+    """Rebuild the engine bundle for a shrunk observation grid — the
+    elastic-rescale seam of ``repro.distributed.fault_tolerance``.
+
+    Returns ``(new_cfg, new_mesh, bundle)``: ``new_cfg`` is `cfg` with
+    ``P=new_P`` and the same per-partition ``n`` (a lost partition's
+    observations leave the problem; SODDA's Theorems 1-4 hold for any P, so
+    the shrunk run is the same algorithm on the surviving data — ``m_tilde``
+    regrows to ``M // (Q * new_P)`` and ``pi_q`` is redrawn next iteration).
+    Mesh backends get a fresh ``(new_P, Q)`` mesh — the old mesh contains
+    the dead worker's devices; single-host backends get ``mesh=None``.
+    `options` are the run's engine options, revalidated against the rebuilt
+    backend.
+    """
+    if not 1 <= new_P <= cfg.P:
+        raise ValueError(
+            f"rescale_bundle only shrinks the grid: new_P must be in "
+            f"[1, {cfg.P}], got {new_P}")
+    if cfg.M % (cfg.Q * new_P):
+        raise ValueError(
+            f"cannot rescale to P={new_P}: M={cfg.M} must split into "
+            f"Q*P={cfg.Q * new_P} equal sub-blocks (m_tilde would not be "
+            "integral)")
+    new_cfg = dataclasses.replace(cfg, name=f"{cfg.name}-P{new_P}", P=new_P)
+    new_mesh = make_mesh_for(new_cfg) if backend in MESH_BACKENDS else None
+    return new_cfg, new_mesh, make_bundle(new_cfg, backend, mesh=new_mesh,
+                                          **options)
 
 
 def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,

@@ -1,3 +1,12 @@
+from repro.distributed.fault_tolerance import (
+    SegmentSupervisor,
+    StragglerPolicy,
+    SurvivorDataPlane,
+    TrainSupervisor,
+    rescale_plan,
+    run_elastic,
+    shrink_plane,
+)
 from repro.distributed.sharding_rules import (
     activation_pspec_fn,
     batch_axes,
@@ -5,4 +14,16 @@ from repro.distributed.sharding_rules import (
     rules_for,
 )
 
-__all__ = ["rules_for", "batch_axes", "decode_mode", "activation_pspec_fn"]
+__all__ = [
+    "rules_for",
+    "batch_axes",
+    "decode_mode",
+    "activation_pspec_fn",
+    "StragglerPolicy",
+    "TrainSupervisor",
+    "SegmentSupervisor",
+    "SurvivorDataPlane",
+    "rescale_plan",
+    "shrink_plane",
+    "run_elastic",
+]

@@ -1,41 +1,88 @@
 """Fault tolerance: supervised training with checkpoint/restart, straggler
-detection, and elastic rescale planning.
+detection, and elastic rescale planning — wired into the resumable driver.
 
 On a real cluster the failure signals come from jax.distributed /
-the coordinator; in this container they are injected by tests. The POLICY
+the coordinator; in this container they are injected deterministically by
+``repro.testing.faults`` through the driver's segment seams. The POLICY
 layer below is the part that must be correct — restart-safety comes from the
 step-atomic checkpoints plus the deterministic data pipeline (batch i is a
 pure function of (seed, step), so a restore replays identically), and
 elasticity comes from SODDA's structure: dropping an observation partition
 just shrinks P — pi_q is redrawn next iteration and convergence theory is
 unaffected (Theorems 1-4 hold for any P).
+
+Three layers, bottom up:
+
+* :class:`StragglerPolicy` — z-score outlier detection over a trailing
+  window of wall times (per segment here, per host in production).
+* :class:`SegmentSupervisor` — runs :func:`repro.core.driver.run_resumable`
+  under retry-with-restore semantics: a failed compiled segment is retried
+  with exponential backoff after the driver restores the latest committed
+  carry (the bitwise resume machinery), the restart budget counts
+  *consecutive* failures (committed progress resets it), and per-segment
+  wall times feed the straggler policy. The supervisor *is* the segment
+  scheduler: it decides what dispatches next, so straggler events land
+  exactly where the scheduling decision is made.
+* :func:`run_elastic` — shrink-P elasticity: phase 1 runs to a simulated
+  partition-loss boundary, :func:`rescale_plan` plans the shrink, the
+  engine bundle is rebuilt with the smaller grid
+  (:func:`repro.core.engine.rescale_bundle`), the carry migrates through a
+  seeded checkpoint (:func:`repro.core.driver.migrate_resumable`) and
+  phase 2 resumes on the surviving data — held to the same-optimum
+  ``STALENESS`` tolerance policy of ``repro.testing.tolerances``.
+
+See ``docs/fault_tolerance.md`` for the full contract.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, List, Optional
 
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.data.plane import DataPlane, as_data_plane
 
 
 @dataclasses.dataclass
 class StragglerPolicy:
-    """Flags steps (hosts) whose duration is a z-score outlier; production
-    response is re-sharding the slow host's partition (elastic) or
-    speculative re-execution. window: trailing steps used for stats."""
+    """Flags steps (segments, hosts) whose duration is a z-score outlier;
+    production response is re-sharding the slow host's partition (elastic)
+    or speculative re-execution.
+
+    window: trailing steps used for the statistics — ``_durations`` is
+    bounded to this many entries, so :attr:`p50` is always the trailing
+    window's median, not the whole run's. warmup: recorded steps required
+    before detection can fire (default ``min(10, window)``, so a small
+    window still arms the detector — a hard-coded 10 would permanently
+    disarm any ``window < 10``).
+    """
 
     window: int = 50
     z_threshold: float = 3.0
+    warmup: Optional[int] = None
     _durations: List[float] = dataclasses.field(default_factory=list)
 
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.warmup is None:
+            self.warmup = min(10, self.window)
+        if not 1 <= self.warmup <= self.window:
+            raise ValueError(
+                f"warmup must be in [1, window={self.window}], got "
+                f"{self.warmup} (a warmup beyond the window never fires)")
+
     def record(self, duration_s: float) -> bool:
-        """Returns True if this duration is a straggler event."""
-        hist = self._durations[-self.window:]
-        self._durations.append(duration_s)
-        if len(hist) < 10:
+        """Returns True if this duration is a straggler event (an outlier
+        against the trailing window *before* it)."""
+        hist = list(self._durations)
+        self._durations.append(float(duration_s))
+        if len(self._durations) > self.window:
+            del self._durations[:len(self._durations) - self.window]
+        if len(hist) < self.warmup:
             return False
         mu, sd = float(np.mean(hist)), float(np.std(hist)) + 1e-9
         return (duration_s - mu) / sd > self.z_threshold
@@ -46,11 +93,24 @@ class StragglerPolicy:
 
 
 def rescale_plan(old_P: int, new_P: int, n_per_partition: int):
-    """Elastic rescale for the SODDA observation grid: which old partitions
-    each surviving worker absorbs. Deterministic, communication-minimal
-    (only the |old-new| lost partitions move)."""
-    assert new_P >= 1
-    plan = {p: [p] for p in range(min(old_P, new_P))}
+    """Elastic rescale plan for the SODDA observation grid: which old
+    partitions each surviving worker absorbs. Deterministic,
+    communication-minimal (only the ``old_P - new_P`` lost partitions move,
+    round-robin over the survivors).
+
+    Shrink only: growing would need a data re-partitioning plan this
+    function does not produce, and the old code silently returned a no-op
+    plan covering only the old partitions — raising keeps a caller from
+    mistaking that for a valid expansion.
+    """
+    if new_P < 1:
+        raise ValueError(f"new_P must be >= 1, got {new_P}")
+    if new_P > old_P:
+        raise ValueError(
+            f"rescale_plan only plans shrinks (got grow {old_P} -> {new_P}): "
+            "growing the grid needs a re-partitioning of existing rows, not "
+            "an absorption plan — repartition the data plane instead")
+    plan = {p: [p] for p in range(new_P)}
     for lost in range(new_P, old_P):  # shrink: round-robin the lost rows
         plan[lost % new_P].append(lost)
     moved = sum(len(v) - 1 for v in plan.values()) * n_per_partition
@@ -62,13 +122,18 @@ class TrainSupervisor:
 
     The step_fn owns device state; on failure (preemption, numerical abort)
     the supervisor restores the latest committed checkpoint and replays.
+    ``restarts`` counts *consecutive* failures: a restore that lands on a
+    strictly newer committed step than the previous one proves the run is
+    making progress and resets the budget, so a long run with occasional
+    transient faults is not killed after ``max_restarts`` cumulative events.
     Used by launch/train.py and exercised with injected faults in tests.
     """
 
     def __init__(self, ckpt: CheckpointManager, max_restarts: int = 3):
         self.ckpt = ckpt
         self.max_restarts = max_restarts
-        self.restarts = 0
+        self.restarts = 0  # consecutive restarts without committed progress
+        self._last_restore: Optional[int] = None
         self.straggler = StragglerPolicy()
         self.events: List[str] = []
 
@@ -88,11 +153,261 @@ class TrainSupervisor:
                 self.ckpt.maybe_save(step, state,
                                      save_extra(step) if save_extra else {"step": step})
             except Exception as e:  # preemption / injected fault
-                self.restarts += 1
                 self.events.append(f"restart@{step}:{type(e).__name__}")
+                committed = latest_step(self.ckpt.directory)
+                landed = 0 if committed is None else committed
+                if self._last_restore is not None and landed > self._last_restore:
+                    self.restarts = 0  # committed progress since last restore
+                self.restarts += 1
+                self._last_restore = landed
                 if self.restarts > self.max_restarts:
                     raise
                 start, state, extra = self.ckpt.restore_or_init(
                     template_fn(), make_state)
                 step = start
         return state
+
+
+# ---------------------------------------------------------------------------
+# Segment-level supervision: retry-with-restore around the resumable driver.
+# ---------------------------------------------------------------------------
+class SegmentSupervisor:
+    """Fault-tolerant :func:`repro.core.driver.run_resumable`: the segment
+    scheduler with retries, backoff and straggler detection.
+
+    Each attempt runs the resumable driver, which restores the latest
+    committed carry from ``checkpoint_dir`` and replays compiled segments —
+    so a retry after a mid-run fault resumes **bitwise** where the last
+    committed segment left off (the driver's existing resume contract). On
+    a fault the supervisor sleeps an exponential backoff
+    (``backoff_base_s * 2**(restarts-1)``, capped at ``backoff_max_s``) and
+    retries; ``restarts`` counts *consecutive* failures and is reset
+    whenever an attempt committed a strictly newer checkpoint than the
+    previous failure saw — only a run that stops making progress exhausts
+    ``max_restarts``. ``ValueError`` is never retried (misconfiguration
+    replays verbatim; a budget of retries cannot fix an argument).
+
+    Per-segment wall times — measured between the driver's
+    ``on_segment_start`` and ``on_segment`` seams, so they cover the
+    compiled dispatch plus the checkpoint write — feed ``straggler``
+    (:class:`StragglerPolicy`); a flagged segment is recorded in
+    :attr:`events` and handed to ``on_straggler(iters_done, seconds)``.
+    The production response (re-shard the slow worker's partition) is the
+    :func:`run_elastic` path; here the policy layer stays deterministic and
+    host-side.
+
+    ``sleep`` and ``clock`` are injectable so the fault-injection suite runs
+    with a fake clock and zero real sleeping (``repro.testing.faults``).
+    """
+
+    def __init__(self, max_restarts: int = 3, backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 5.0,
+                 straggler: Optional[StragglerPolicy] = None,
+                 on_straggler: Optional[Callable] = None,
+                 sleep: Callable = time.sleep,
+                 clock: Callable = time.monotonic):
+        self.max_restarts = max_restarts
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.straggler = straggler if straggler is not None else StragglerPolicy()
+        self.on_straggler = on_straggler
+        self.sleep = sleep
+        self.clock = clock
+        self.restarts = 0  # consecutive restarts without committed progress
+        self.total_restarts = 0
+        self.events: List[str] = []
+
+    def run_resumable(self, key, data, cfg, iters: int,
+                      backend: str = "reference", *, checkpoint_dir: str,
+                      on_segment: Optional[Callable] = None,
+                      on_segment_start: Optional[Callable] = None,
+                      **kwargs):
+        """:func:`repro.core.driver.run_resumable` under supervision.
+
+        Same signature and ``(final_state, history)`` contract; the two
+        segment seams are wrapped (timing + straggler detection) and chained
+        to the caller's callbacks, which remain the fault-injection points.
+        """
+        from repro.core import driver
+
+        last_committed = latest_step(checkpoint_dir)
+        t_ref = [self.clock()]
+
+        def _start(done):
+            t_ref[0] = self.clock()
+            if on_segment_start is not None:
+                on_segment_start(done)
+
+        def _end(done):
+            dt = self.clock() - t_ref[0]
+            if self.straggler.record(dt):
+                self.events.append(f"straggler@{done}:{dt:.3f}s")
+                if self.on_straggler is not None:
+                    self.on_straggler(done, dt)
+            if on_segment is not None:
+                on_segment(done)
+
+        while True:
+            try:
+                return driver.run_resumable(
+                    key, data, cfg, iters, backend,
+                    checkpoint_dir=checkpoint_dir, on_segment=_end,
+                    on_segment_start=_start, **kwargs)
+            except ValueError:
+                raise  # misconfiguration — a retry would replay it verbatim
+            except Exception as exc:
+                committed = latest_step(checkpoint_dir)
+                progressed = committed is not None and (
+                    last_committed is None or committed > last_committed)
+                if progressed:
+                    self.restarts = 0
+                last_committed = committed
+                self.restarts += 1
+                self.total_restarts += 1
+                self.events.append(
+                    f"restart#{self.restarts}@"
+                    f"{'-' if committed is None else committed}:"
+                    f"{type(exc).__name__}")
+                if self.restarts > self.max_restarts:
+                    raise
+                delay = min(self.backoff_max_s,
+                            self.backoff_base_s * 2 ** (self.restarts - 1))
+                self.events.append(f"backoff:{delay:.3f}s")
+                self.sleep(delay)
+
+
+# ---------------------------------------------------------------------------
+# Shrink-P elasticity: partition loss as a live rescale, not a failure.
+# ---------------------------------------------------------------------------
+class SurvivorDataPlane(DataPlane):
+    """View of a :class:`repro.data.plane.DataPlane` keeping observation
+    partitions ``0..new_P-1`` — the survivors of a :func:`rescale_plan`
+    shrink (the lost partitions are the tail indices).
+
+    Pure delegation: every surviving tile/label block is the base plane's
+    own (bitwise), so for the key-derived planes a survivor view equals a
+    fresh plane built on the smaller grid. Placement (single-host assembly
+    or per-tile mesh placement) is inherited from the DataPlane base class.
+    Not a registered plane — it is a view over one, never built from a key.
+    """
+
+    def __init__(self, base, new_P: int):
+        if not 1 <= new_P <= base.P:
+            raise ValueError(
+                f"new_P must be in [1, {base.P}], got {new_P}")
+        self._base = base
+        self._init_grid(base.n * new_P, base.M, new_P, base.Q)
+
+    def x_tile(self, p: int, q: int):
+        if not (0 <= p < self.P and 0 <= q < self.Q):
+            raise IndexError(f"tile ({p}, {q}) outside surviving grid "
+                             f"({self.P}, {self.Q})")
+        return self._base.x_tile(p, q)
+
+    def y_block(self, p: int):
+        if not 0 <= p < self.P:
+            raise IndexError(f"row block {p} outside surviving grid "
+                             f"P={self.P}")
+        return self._base.y_block(p)
+
+
+def shrink_plane(data, new_P: int):
+    """The surviving data after a shrink to ``new_P`` observation
+    partitions: a :class:`SurvivorDataPlane` view over the first ``new_P``
+    row blocks. The lost partitions' rows leave the optimization problem —
+    SODDA's convergence theory holds for any P, which is what makes the
+    drop a legitimate live-rescale."""
+    return SurvivorDataPlane(as_data_plane(data), new_P)
+
+
+def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
+                checkpoint_dir: str, segment_iters: int,
+                lose_partition_at: int, new_P: Optional[int] = None,
+                record_every: int = 1, keep: int = 3, mesh=None,
+                supervisor: Optional[SegmentSupervisor] = None,
+                on_segment: Optional[Callable] = None,
+                on_segment_start: Optional[Callable] = None, **options):
+    """A SODDA run that survives losing an observation partition mid-run.
+
+    Phase 1 runs (supervised) to ``lose_partition_at`` — a segment boundary
+    — under ``cfg``'s full ``P``. The loss is then handled as a live
+    rescale: :func:`rescale_plan` plans the shrink to ``new_P`` (default
+    ``P - 1``), :func:`repro.core.engine.rescale_bundle` rebuilds the engine
+    bundle on the shrunk grid (fresh ``(new_P, Q)`` mesh for the mesh
+    backends), and the carry migrates through
+    :func:`repro.core.driver.migrate_resumable`: the finalized
+    ``SoddaState`` — P-independent by construction: the ``(M,)`` iterate,
+    the step counter and the base PRNG key — is re-seeded as a committed
+    checkpoint in the shrunk run's directory (extended-carry backends get a
+    fresh warm-up exchange there; the old buffer aggregated lost data).
+    Phase 2 resumes it to ``iters`` on the surviving data.
+
+    Both phases run under one :class:`SegmentSupervisor` (straggler
+    statistics and restart accounting span the rescale) and each phase keeps
+    the driver's bitwise kill-and-resume contract; the *shrunk trajectory
+    itself* is a different optimization problem (fewer observations), held
+    to the same-optimum ``STALENESS`` tolerance policy in
+    ``tests/test_fault_tolerance.py``.
+
+    ``on_segment`` / ``on_segment_start`` are forwarded to both supervised
+    phases — the fault-injection seams stay available across the rescale
+    (phase-2 callbacks see the shrunk run's ``iters_done``).
+
+    Returns ``(final_state, history, report)`` where ``history`` carries the
+    uninterrupted run's recording ticks (phase-1 objectives over the full
+    data, phase-2 over the surviving data — the objective may step at the
+    rescale boundary) and ``report`` records the plan, moved rows, shrunk
+    config/plane and the supervisor's event log.
+    """
+    from repro.core import driver, engine
+
+    sup = supervisor if supervisor is not None else SegmentSupervisor()
+    new_P = cfg.P - 1 if new_P is None else new_P
+    plane = as_data_plane(data)
+    if plane.P != cfg.P:
+        raise ValueError(
+            f"elastic rescale needs the data plane partitioned like the run "
+            f"(plane P={plane.P}, cfg P={cfg.P}); pass a plane built on "
+            "cfg's grid")
+    if not 0 < lose_partition_at < iters:
+        raise ValueError(
+            f"lose_partition_at must be inside the run (0, {iters}), got "
+            f"{lose_partition_at}")
+    if lose_partition_at % segment_iters:
+        raise ValueError(
+            f"lose_partition_at ({lose_partition_at}) must be a segment "
+            f"boundary (multiple of segment_iters={segment_iters}): a "
+            "partition is droppable exactly where a committed carry exists")
+
+    plan, moved = rescale_plan(cfg.P, new_P, cfg.n)  # validates the shrink
+
+    d_full = os.path.join(checkpoint_dir, f"P{cfg.P}")
+    d_shrunk = os.path.join(checkpoint_dir, f"P{new_P}")
+
+    seams = {"on_segment": on_segment, "on_segment_start": on_segment_start}
+    state1, hist1 = sup.run_resumable(
+        key, plane, cfg, lose_partition_at, backend, checkpoint_dir=d_full,
+        segment_iters=segment_iters, record_every=record_every, mesh=mesh,
+        keep=keep, **seams, **options)
+    sup.events.append(
+        f"rescale@{lose_partition_at}:P{cfg.P}->P{new_P} ({moved} rows "
+        "absorbable; dropped here)")
+
+    new_cfg, new_mesh, _ = engine.rescale_bundle(cfg, backend, new_P,
+                                                 **options)
+    survivors = shrink_plane(plane, new_P)
+    if latest_step(d_shrunk) is None:
+        # strip the boundary objective (measured over the full data); the
+        # shrunk run re-records that tick over the surviving data
+        driver.migrate_resumable(
+            key, survivors, new_cfg, lose_partition_at, state1, backend,
+            checkpoint_dir=d_shrunk, segment_iters=segment_iters,
+            record_every=record_every, mesh=new_mesh, history=hist1[:-1],
+            keep=keep, **options)
+    state, hist = sup.run_resumable(
+        key, survivors, new_cfg, iters, backend, checkpoint_dir=d_shrunk,
+        segment_iters=segment_iters, record_every=record_every,
+        mesh=new_mesh, keep=keep, **seams, **options)
+    report = {"plan": plan, "moved_rows": moved, "new_cfg": new_cfg,
+              "survivors": survivors, "events": list(sup.events)}
+    return state, hist, report

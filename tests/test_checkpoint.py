@@ -55,6 +55,71 @@ def test_uncommitted_checkpoint_ignored(tmp_path):
     assert latest_step(d) == 1
 
 
+def test_malformed_step_entries_are_skipped(tmp_path):
+    """Regression (ISSUE 6): a stray non-integer ``step_*`` entry — an
+    editor backup, a junk dir — made ``int(name[5:])`` raise and bricked
+    both restore and GC. Malformed names must be ignored, not fatal."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree())
+    # a full-directory backup keeps its _COMMITTED marker — the exact entry
+    # that bricked latest_step (int("0000000100.bak"))
+    os.makedirs(os.path.join(d, "step_0000000100.bak"))
+    with open(os.path.join(d, "step_0000000100.bak", "_COMMITTED"), "w") as f:
+        f.write("ok")
+    os.makedirs(os.path.join(d, "step_foo"))  # bricked _gc (int("foo"))
+    with open(os.path.join(d, "step_notes.txt"), "w") as f:
+        f.write("junk")
+    assert latest_step(d) == 1
+    step, restored, _ = restore_checkpoint(d, tree())
+    assert step == 1
+    np.testing.assert_array_equal(restored["b"]["c"], tree()["b"]["c"])
+    # GC (runs inside save) must also survive — and leave the junk alone
+    save_checkpoint(d, 2, tree(), keep=1)
+    names = set(os.listdir(d))
+    assert {"step_0000000100.bak", "step_foo", "step_notes.txt"} <= names
+    assert "step_0000000001" not in names  # collected as usual
+
+
+def test_gc_keep_counts_only_committed(tmp_path):
+    """Regression companion: uncommitted (crash-truncated) step dirs must
+    not crowd committed checkpoints out of the keep budget, and in-flight
+    ``.tmp`` trees are never GC targets."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree(), keep=10)
+    save_checkpoint(d, 2, tree(), keep=10)
+    for s in (3, 4, 5):  # crash-truncated: dirs without _COMMITTED
+        os.makedirs(os.path.join(d, f"step_{s:010d}"))
+    os.makedirs(os.path.join(d, "step_0000000099.tmp"))
+    save_checkpoint(d, 6, tree(), keep=3)
+    assert latest_step(d) == 6
+    # all three committed survive: the keep budget ignored the junk between
+    for s in (1, 2, 6):
+        assert restore_checkpoint(d, tree(), step=s)[0] == s
+    assert os.path.isdir(os.path.join(d, "step_0000000099.tmp"))
+    # once enough *committed* ones exist, older junk goes with the cutoff
+    save_checkpoint(d, 7, tree(), keep=2)
+    names = set(os.listdir(d))
+    assert "step_0000000003" not in names  # uncommitted below cutoff: gone
+    assert "step_0000000001" not in names
+    assert latest_step(d) == 7
+
+
+def test_read_extra_missing_or_uncommitted_step(tmp_path):
+    from repro.checkpoint import read_extra
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(FileNotFoundError):
+        read_extra(d)  # directory does not even exist
+    save_checkpoint(d, 1, tree(), extra={"k": 1})
+    assert read_extra(d) == (1, {"k": 1})
+    with pytest.raises(FileNotFoundError):
+        read_extra(d, step=2)  # no such step
+    os.makedirs(os.path.join(d, "step_0000000003"))  # uncommitted
+    with pytest.raises(FileNotFoundError):
+        read_extra(d, step=3)
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(d, tree(), step=3)
+
+
 def test_supervisor_restarts_from_checkpoint(tmp_path):
     """Inject a fault at step 7; training must restore and complete with the
     exact same final state as a fault-free run (determinism)."""

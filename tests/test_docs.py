@@ -21,7 +21,7 @@ def test_repo_docs_have_no_dangling_references():
 
 def test_docs_pages_exist_and_are_linked_from_readme():
     for page in ("architecture.md", "backends.md", "benchmarks.md",
-                 "data.md"):
+                 "data.md", "fault_tolerance.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
@@ -29,6 +29,7 @@ def test_docs_pages_exist_and_are_linked_from_readme():
     assert "docs/backends.md" in readme
     assert "docs/benchmarks.md" in readme
     assert "docs/data.md" in readme
+    assert "docs/fault_tolerance.md" in readme
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +119,52 @@ def test_plane_drift_check_flags_undocumented_plane(tmp_path):
     assert len(errors) == 1 and "missing" in errors[0]
     # foreign tree without the plane source: nothing to check
     assert check_docs.check_planes_documented(str(tmp_path / "docs")) == []
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerance↔docs drift: every public supervisor/policy name must have a
+# docs/fault_tolerance.md entry, and the static scan must agree with the
+# runtime module it stands in for.
+# ---------------------------------------------------------------------------
+def test_fault_tolerance_scan_matches_runtime_module():
+    from repro.distributed import fault_tolerance as ft
+    scanned = check_docs.fault_tolerance_api(os.path.abspath(ROOT))
+    runtime = sorted(
+        n for n, obj in vars(ft).items()
+        if not n.startswith("_") and callable(obj)
+        and getattr(obj, "__module__", None) == ft.__name__)
+    assert scanned == runtime, (scanned, runtime)
+
+
+def test_every_fault_tolerance_name_is_documented():
+    errors = check_docs.check_fault_tolerance_documented(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_fault_tolerance_drift_check_flags_undocumented_name(tmp_path):
+    dist = tmp_path / "src" / "repro" / "distributed"
+    dist.mkdir(parents=True)
+    (dist / "fault_tolerance.py").write_text(
+        "class Documented:\n    def method(self): ...\n"
+        "def _private(): ...\n"
+        "def ghost_policy(): ...\n")
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "fault_tolerance.md").write_text("`Documented` is covered\n")
+    errors = check_docs.check_fault_tolerance_documented(str(tmp_path))
+    # `method` (indented) and `_private` are exempt; only the ghost flags
+    assert len(errors) == 1 and "`ghost_policy`" in errors[0], errors
+    (tmp_path / "README.md").write_text("clean\n")
+    assert errors[0] in check_docs.check_tree(str(tmp_path))
+    (docs / "fault_tolerance.md").write_text("`Documented` `ghost_policy`\n")
+    assert check_docs.check_fault_tolerance_documented(str(tmp_path)) == []
+    # missing page with a non-empty module is drift too
+    (docs / "fault_tolerance.md").unlink()
+    errors = check_docs.check_fault_tolerance_documented(str(tmp_path))
+    assert len(errors) == 1 and "missing" in errors[0]
+    # foreign tree without the module: nothing to check
+    assert check_docs.check_fault_tolerance_documented(
+        str(tmp_path / "docs")) == []
 
 
 def test_checker_slug_rules():

@@ -1,0 +1,399 @@
+"""The fault-tolerance layer, made load-bearing (ROADMAP "Elastic,
+fault-tolerant production runs"): supervised resumable runs survive injected
+segment kills bitwise, straggler detection fires on planted outliers (the
+`window < 10` bug), restart budgets are consecutive (not cumulative), and a
+shrink-P elastic run converges to the shrunk problem's optimum under the
+STALENESS same-optimum policy. Every injected failure is deterministic
+(``repro.testing.faults``): fake clock, recorded sleeps, scheduled kills.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.core import driver
+from repro.distributed.fault_tolerance import (SegmentSupervisor,
+                                               StragglerPolicy,
+                                               SurvivorDataPlane,
+                                               TrainSupervisor, rescale_plan,
+                                               run_elastic, shrink_plane)
+from repro.testing import (STALENESS, FakeClock, FaultInjector, Preemption,
+                           SleepRecorder, assert_objectives_close,
+                           make_data_plane, small_fixture_config,
+                           sodda_test_mesh)
+
+pytestmark = pytest.mark.fault
+
+ITERS, SEGMENT, RECORD = 10, 4, 2
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return small_fixture_config()
+
+
+@pytest.fixture(scope="module")
+def plane(cfg):
+    return make_data_plane(cfg, "tiled")
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy
+# ---------------------------------------------------------------------------
+def test_straggler_small_window_detects_outlier():
+    """Regression (ISSUE 6): the warm-up floor was hard-coded to 10, so any
+    window < 10 could never accumulate enough history and the detector was
+    permanently disarmed — window=5 must flag a planted outlier."""
+    sp = StragglerPolicy(window=5, z_threshold=3.0)
+    for _ in range(5):
+        assert not sp.record(0.1)
+    assert sp.record(1.5)
+
+
+def test_straggler_history_bounded_to_window():
+    """Regression (ISSUE 6): ``_durations`` grew without bound and p50 was
+    the whole run's median. A long run of slow steps must age fast early
+    steps out of the trailing window."""
+    sp = StragglerPolicy(window=5)
+    for _ in range(95):
+        sp.record(0.1)
+    for _ in range(5):
+        sp.record(0.4)
+    assert len(sp._durations) == 5
+    assert sp.p50 == pytest.approx(0.4)  # trailing window, not run median
+
+
+def test_straggler_outlier_judged_against_prior_window():
+    """The planted spike must be compared to the window *before* it — and
+    recorded, so repeated spikes stop being outliers (they are the new
+    normal)."""
+    sp = StragglerPolicy(window=8, warmup=4)
+    for _ in range(4):
+        sp.record(0.1)
+    assert sp.record(2.0)
+    for _ in range(6):
+        sp.record(2.0)  # spikes take over the window
+    assert not sp.record(2.0)
+
+
+def test_straggler_policy_validation():
+    with pytest.raises(ValueError, match="window"):
+        StragglerPolicy(window=0)
+    with pytest.raises(ValueError, match="warmup"):
+        StragglerPolicy(window=5, warmup=0)
+    with pytest.raises(ValueError, match="warmup"):
+        StragglerPolicy(window=5, warmup=6)  # could never fire
+    assert StragglerPolicy(window=5).warmup == 5
+    assert StragglerPolicy(window=50).warmup == 10
+
+
+# ---------------------------------------------------------------------------
+# rescale_plan
+# ---------------------------------------------------------------------------
+def test_rescale_plan_rejects_grow():
+    """Regression (ISSUE 6): growing silently returned a no-op plan covering
+    only the old partitions with moved=0 — indistinguishable from a valid
+    expansion. Now a ValueError."""
+    with pytest.raises(ValueError, match="shrink"):
+        rescale_plan(4, 5, n_per_partition=10)
+    with pytest.raises(ValueError, match=">= 1"):
+        rescale_plan(4, 0, n_per_partition=10)
+
+
+def test_rescale_plan_shrink_to_one():
+    plan, moved = rescale_plan(3, 1, n_per_partition=7)
+    assert plan == {0: [0, 1, 2]}
+    assert moved == 14
+
+
+# ---------------------------------------------------------------------------
+# TrainSupervisor: consecutive restart budget
+# ---------------------------------------------------------------------------
+def _step_supervisor(tmp_path, name, every, max_restarts, fault_steps):
+    import jax.numpy as jnp
+    ckpt = CheckpointManager(str(tmp_path / name), every=every)
+    sup = TrainSupervisor(ckpt, max_restarts=max_restarts)
+    remaining = dict.fromkeys(fault_steps, 1)
+
+    def make_state():
+        return {"w": jnp.zeros(4)}
+
+    def step_fn(state, step, extra):
+        if remaining.get(step, 0):
+            remaining[step] -= 1
+            raise Preemption(f"injected@{step}")
+        return {"w": state["w"] + jnp.float32(step)}
+
+    return sup, lambda: sup.run(10, make_state, make_state, step_fn)
+
+
+def test_train_supervisor_budget_is_consecutive(tmp_path):
+    """Regression (ISSUE 6): the budget was cumulative, so three transient
+    faults killed a run with max_restarts=2 even though every restart
+    restored committed progress. Checkpointing every step, faults at 3/5/7
+    each land on a strictly newer restore — the budget must reset and the
+    run complete."""
+    sup, run = _step_supervisor(tmp_path, "consec", every=1, max_restarts=1,
+                                fault_steps=(3, 5, 7))
+    state = run()
+    np.testing.assert_array_equal(
+        np.asarray(state["w"]), np.full(4, float(sum(range(10)))))
+    assert len([e for e in sup.events if e.startswith("restart@")]) == 3
+    assert sup.restarts == 1  # never exceeded the (reset) budget
+
+
+def test_train_supervisor_exhausts_without_progress(tmp_path):
+    """The counter-case: with no checkpoint cadence every restore lands on
+    the same (absent) step — no progress, consecutive failures, and the
+    budget must still kill the run."""
+    sup = TrainSupervisor(CheckpointManager(str(tmp_path / "s2"), every=100),
+                          max_restarts=2)
+
+    def make_state():
+        import jax.numpy as jnp
+        return {"w": jnp.zeros(2)}
+
+    def step_fn(state, step, extra):
+        if step == 4:
+            raise Preemption("permanent fault")
+        return state
+
+    with pytest.raises(Preemption):
+        sup.run(10, make_state, make_state, step_fn)
+    assert sup.restarts == 3  # max_restarts=2 exceeded on the 3rd
+
+
+# ---------------------------------------------------------------------------
+# SegmentSupervisor: retry-with-restore around the resumable driver
+# ---------------------------------------------------------------------------
+def test_supervised_retry_is_bitwise(cfg, plane, tmp_path):
+    """A run killed twice (after-commit and before-commit seams) and retried
+    under supervision must reproduce the unsupervised run bitwise."""
+    key = jax.random.PRNGKey(1)
+    s0, h0 = driver.run_resumable(key, plane, cfg, ITERS, "reference",
+                                  checkpoint_dir=str(tmp_path / "plain"),
+                                  segment_iters=SEGMENT, record_every=RECORD)
+    inj_end = FaultInjector({SEGMENT: 1})
+    inj_start = FaultInjector({2 * SEGMENT: 1})
+    sleeps = SleepRecorder()
+    sup = SegmentSupervisor(max_restarts=3, sleep=sleeps, clock=FakeClock())
+    s1, h1 = sup.run_resumable(key, plane, cfg, ITERS, "reference",
+                               checkpoint_dir=str(tmp_path / "sup"),
+                               segment_iters=SEGMENT, record_every=RECORD,
+                               on_segment=inj_end, on_segment_start=inj_start)
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+    assert inj_end.exhausted and inj_start.exhausted
+    assert sup.total_restarts == 2
+    assert len(sleeps.delays) == 2  # one backoff per restart
+
+
+def test_supervisor_backoff_and_budget_exhaustion(cfg, plane, tmp_path):
+    """A fault that replays before the first commit makes no progress;
+    backoff must double per consecutive failure and the budget must
+    eventually surface the fault."""
+    inj = FaultInjector({0: 99})  # permanent: every attempt dies at start
+    sleeps = SleepRecorder()
+    sup = SegmentSupervisor(max_restarts=3, backoff_base_s=0.05,
+                            sleep=sleeps, clock=FakeClock())
+    with pytest.raises(Preemption):
+        sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                          "reference", checkpoint_dir=str(tmp_path / "c"),
+                          segment_iters=SEGMENT, record_every=RECORD,
+                          on_segment_start=inj)
+    assert sup.restarts == 4  # 3 retries + the raising failure
+    assert sleeps.delays == pytest.approx([0.05, 0.10, 0.20])  # exponential
+    assert latest_step(str(tmp_path / "c")) is None  # truly no progress
+
+
+def test_supervisor_budget_resets_on_committed_progress(cfg, plane, tmp_path):
+    """Segment-level version of the consecutive-budget contract: faults at
+    two *different* boundaries each follow committed progress, so
+    max_restarts=1 must survive both."""
+    inj = FaultInjector({SEGMENT: 1, 2 * SEGMENT: 1})
+    sup = SegmentSupervisor(max_restarts=1, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    s, h = sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                             "reference", checkpoint_dir=str(tmp_path / "c"),
+                             segment_iters=SEGMENT, record_every=RECORD,
+                             on_segment_start=inj)
+    assert int(s.t) == ITERS + 1
+    assert sup.total_restarts == 2
+    assert sup.restarts == 1  # the consecutive counter was reset in between
+
+
+def test_supervisor_does_not_retry_valueerror(cfg, plane, tmp_path):
+    """Misconfiguration replays verbatim — no retry budget is spent on it."""
+    sup = SegmentSupervisor(sleep=SleepRecorder(), clock=FakeClock())
+    with pytest.raises(ValueError, match="segment_iters"):
+        sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                          "reference", checkpoint_dir=str(tmp_path / "c"),
+                          segment_iters=0)
+    assert sup.restarts == 0 and sup.events == []
+
+
+def test_supervisor_straggler_detection(cfg, plane, tmp_path):
+    """A planted slow segment (fake clock advanced mid-segment) must be
+    flagged by a window smaller than the old hard-coded warm-up floor,
+    recorded in the event log, and handed to on_straggler."""
+    clock = FakeClock()
+    flagged = []
+
+    def slow_segment(done):
+        if done == 8:  # segment [8, 10) runs slow
+            clock.advance(5.0)
+
+    sup = SegmentSupervisor(
+        straggler=StragglerPolicy(window=4, z_threshold=3.0),
+        on_straggler=lambda done, dt: flagged.append((done, dt)),
+        sleep=SleepRecorder(), clock=clock)
+    sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+                      checkpoint_dir=str(tmp_path / "c"), segment_iters=2,
+                      record_every=2, on_segment_start=slow_segment)
+    assert flagged == [(10, pytest.approx(5.0))]
+    assert any(e.startswith("straggler@10") for e in sup.events)
+
+
+# ---------------------------------------------------------------------------
+# Shrink-P elasticity
+# ---------------------------------------------------------------------------
+def test_shrink_plane_is_bitwise_view_of_survivors(cfg, plane):
+    survivors = shrink_plane(plane, 1)
+    assert isinstance(survivors, SurvivorDataPlane)
+    assert (survivors.P, survivors.Q) == (1, cfg.Q)
+    assert survivors.N == cfg.n and survivors.M == cfg.M
+    for q in range(cfg.Q):
+        np.testing.assert_array_equal(np.asarray(survivors.x_tile(0, q)),
+                                      np.asarray(plane.x_tile(0, q)))
+    np.testing.assert_array_equal(np.asarray(survivors.y_block(0)),
+                                  np.asarray(plane.y_block(0)))
+    with pytest.raises(IndexError):
+        survivors.x_tile(1, 0)  # the lost partition is gone from the view
+    with pytest.raises(IndexError):
+        survivors.y_block(1)
+    with pytest.raises(ValueError):
+        shrink_plane(plane, cfg.P + 1)
+
+
+def test_shrink_plane_equals_fresh_smaller_plane(cfg, plane):
+    """Tile generation folds only (p, q) into the key, never P — so the
+    survivor view IS the plane a fresh (new_P, Q) run would build, bitwise.
+    This is what entitles the shrunk phase to the resumable driver's
+    fingerprint/conformance machinery unchanged."""
+    from repro.data.plane import make_plane
+    fresh = make_plane("tiled", jax.random.PRNGKey(0), cfg.n, cfg.M, 1,
+                       cfg.Q)
+    survivors = shrink_plane(plane, 1)
+    for q in range(cfg.Q):
+        np.testing.assert_array_equal(np.asarray(survivors.x_tile(0, q)),
+                                      np.asarray(fresh.x_tile(0, q)))
+    np.testing.assert_array_equal(np.asarray(survivors.y_block(0)),
+                                  np.asarray(fresh.y_block(0)))
+
+
+def test_rescale_bundle_rebuilds_grid(cfg):
+    from repro.core import engine
+    new_cfg, new_mesh, bundle = engine.rescale_bundle(cfg, "reference", 1)
+    assert new_cfg.P == 1 and new_cfg.Q == cfg.Q and new_cfg.n == cfg.n
+    assert new_cfg.m_tilde == cfg.M // (cfg.Q * 1)
+    assert new_mesh is None and bundle.step is not None
+    with pytest.raises(ValueError, match="shrink"):
+        engine.rescale_bundle(cfg, "reference", cfg.P + 1)
+
+
+def test_run_elastic_structure_and_report(cfg, plane, tmp_path):
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=SEGMENT,
+        lose_partition_at=SEGMENT, record_every=RECORD)
+    assert [t for t, _ in hist] == list(range(0, ITERS + 1, RECORD))
+    assert int(s.t) == ITERS + 1
+    assert report["new_cfg"].P == cfg.P - 1
+    assert report["survivors"].P == cfg.P - 1
+    assert report["plan"] == {0: [0, 1]}
+    assert report["moved_rows"] == cfg.n
+    assert any(e.startswith(f"rescale@{SEGMENT}") for e in report["events"])
+
+
+def test_run_elastic_deterministic_under_faults(cfg, plane, tmp_path):
+    """Kills in both phases (before and after the rescale) must not change
+    the elastic trajectory: each phase keeps the driver's bitwise
+    kill-and-resume contract."""
+    key = jax.random.PRNGKey(1)
+
+    def go(sub, **kw):
+        return run_elastic(key, plane, cfg, ITERS, "reference",
+                           checkpoint_dir=str(tmp_path / sub),
+                           segment_iters=SEGMENT, lose_partition_at=SEGMENT,
+                           record_every=RECORD, **kw)
+
+    s0, h0, _ = go("clean")
+    inj = FaultInjector({SEGMENT: 2, 2 * SEGMENT: 1})
+    sup = SegmentSupervisor(max_restarts=2, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    s1, h1, rep = go("faulty", on_segment_start=inj, supervisor=sup)
+    assert inj.exhausted and sup.total_restarts == 3
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+
+
+def test_run_elastic_converges_to_shrunk_optimum(cfg, tmp_path):
+    """Acceptance criterion: the shrunk run is a *different* optimization
+    problem (the lost rows left it), so the contract is same-optimum — the
+    elastic run's final objective must land in the neighbourhood of a
+    from-scratch run on the surviving data, under the STALENESS policy."""
+    plane = make_data_plane(cfg, "tiled")
+    iters, lose_at = 30, 10
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(2), plane, cfg, iters, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=5,
+        lose_partition_at=lose_at, record_every=5)
+    _, h_ref = driver.run(jax.random.PRNGKey(2),
+                          shrink_plane(plane, cfg.P - 1),
+                          report["new_cfg"], iters, "reference",
+                          record_every=5)
+    assert_objectives_close(h_ref[-1][1], hist[-1][1], STALENESS,
+                            context="elastic shrink-P vs from-scratch")
+    f_at_loss = dict(hist)[lose_at]
+    assert hist[-1][1] < f_at_loss  # still a descent after the rescale
+
+
+def test_run_elastic_shard_map_backend(cfg, plane, tmp_path):
+    """Mesh backends rebuild a fresh (new_P, Q) mesh at the rescale — the
+    old mesh holds the dead worker's devices."""
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "shard_map",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=SEGMENT,
+        lose_partition_at=SEGMENT, record_every=RECORD,
+        mesh=sodda_test_mesh(cfg))
+    assert int(s.t) == ITERS + 1
+    assert [t for t, _ in hist] == list(range(0, ITERS + 1, RECORD))
+    assert report["new_cfg"].P == cfg.P - 1
+
+
+def test_run_elastic_validates_arguments(cfg, plane, tmp_path):
+    key = jax.random.PRNGKey(1)
+    d = str(tmp_path / "e")
+    with pytest.raises(ValueError, match="segment boundary"):
+        run_elastic(key, plane, cfg, ITERS, checkpoint_dir=d,
+                    segment_iters=SEGMENT, lose_partition_at=3)
+    with pytest.raises(ValueError, match="inside the run"):
+        run_elastic(key, plane, cfg, ITERS, checkpoint_dir=d,
+                    segment_iters=SEGMENT, lose_partition_at=ITERS)
+    with pytest.raises(ValueError, match="shrink"):
+        run_elastic(key, plane, cfg, ITERS, checkpoint_dir=d,
+                    segment_iters=SEGMENT, lose_partition_at=SEGMENT,
+                    new_P=cfg.P + 1)
+    bad = shrink_plane(plane, 1)  # plane P=1 != cfg P=2
+    with pytest.raises(ValueError, match="partitioned like the run"):
+        run_elastic(key, bad, cfg, ITERS, checkpoint_dir=d,
+                    segment_iters=SEGMENT, lose_partition_at=SEGMENT)
+
+
+def test_migrate_resumable_validates_boundary(cfg, plane, tmp_path):
+    from repro.core.sodda import init_state
+    state = init_state(jax.random.PRNGKey(1), cfg.M)
+    with pytest.raises(ValueError, match="segment boundary"):
+        driver.migrate_resumable(jax.random.PRNGKey(1), plane, cfg, 3, state,
+                                 checkpoint_dir=str(tmp_path / "m"),
+                                 segment_iters=SEGMENT)

@@ -73,6 +73,42 @@ def test_kill_and_resume_is_bitwise(backend, cfg, plane, tmp_path, request):
     assert not hasattr(s_res, "mu")  # finalize stripped any extended carry
 
 
+@pytest.mark.fault
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_supervised_kill_and_resume_is_bitwise(backend, cfg, plane, tmp_path,
+                                               request):
+    """The segment supervisor's retry loop must land exactly where a manual
+    resume does: two injected kills — one after a commit, one before any new
+    commit — and the supervised trajectory is still bitwise the
+    uninterrupted one, for every backend including the extended-carry ones
+    whose exchange buffer rides the checkpoint."""
+    from repro.distributed import SegmentSupervisor
+    from repro.testing import FakeClock, FaultInjector, SleepRecorder
+
+    kw = _kwargs(backend, cfg, request)
+    key = jax.random.PRNGKey(1)
+    inj_end = FaultInjector({SEGMENT: 1})     # dies after the commit landed
+    inj_start = FaultInjector({2 * SEGMENT: 1})  # dies before any progress
+    sleeps = SleepRecorder()
+    sup = SegmentSupervisor(max_restarts=3, sleep=sleeps, clock=FakeClock())
+    s_sup, h_sup = sup.run_resumable(key, plane, cfg, ITERS, backend,
+                                     checkpoint_dir=str(tmp_path / "sup"),
+                                     segment_iters=SEGMENT,
+                                     record_every=RECORD, on_segment=inj_end,
+                                     on_segment_start=inj_start, **kw)
+    s_full, h_full = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD, **kw)
+    assert inj_end.exhausted and inj_start.exhausted
+    assert sup.total_restarts == 2 and len(sleeps.delays) == 2
+    assert h_sup == h_full, f"{backend}: supervised history diverged"
+    np.testing.assert_array_equal(
+        np.asarray(s_sup.w), np.asarray(s_full.w),
+        err_msg=f"{backend}: supervised final iterate diverged")
+    assert int(s_sup.t) == ITERS + 1
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_segmented_matches_one_dispatch_run(backend, cfg, plane, tmp_path,
                                             request):

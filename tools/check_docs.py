@@ -13,14 +13,17 @@ silently-broken documentation behind:
     ``repro.core.driver.make_run``) — some prefix of at least two components
     must resolve to a module or package under ``src/``.
 
-It also checks the reverse direction for two registries: every backend
+It also checks the reverse direction for three API surfaces: every backend
 registered in ``src/repro/core/engine.py`` must appear (backticked) in the
-``docs/backends.md`` catalog, and every data plane registered in
-``src/repro/data/plane.py`` must appear in ``docs/data.md`` — so neither a
-new backend nor a new DataPlane implementation can land undocumented. The
-registries are read by scanning the sources for the
-``@register_backend("...")`` / ``@register_plane("...")`` decorations —
-pure stdlib, no jax import — so the CI docs job stays dependency-free.
+``docs/backends.md`` catalog, every data plane registered in
+``src/repro/data/plane.py`` must appear in ``docs/data.md``, and every
+public supervisor/policy name defined in
+``src/repro/distributed/fault_tolerance.py`` must appear in
+``docs/fault_tolerance.md`` — so none of them can land undocumented. The
+surfaces are read by scanning the sources for the
+``@register_backend("...")`` / ``@register_plane("...")`` decorations and
+top-level ``class``/``def`` statements — pure stdlib, no jax import — so
+the CI docs job stays dependency-free.
 
 Exit status 0 when clean, 1 with one line per dangling reference:
 
@@ -212,12 +215,50 @@ def check_planes_documented(root: str):
             for p in planes if f"`{p}`" not in text]
 
 
+_FAULT_SRC = os.path.join("src", "repro", "distributed", "fault_tolerance.py")
+_FAULT_DOC = os.path.join("docs", "fault_tolerance.md")
+_PUBLIC_DEF_RE = re.compile(r"^(?:class|def)\s+([A-Za-z]\w*)", re.MULTILINE)
+
+
+def fault_tolerance_api(root: str):
+    """Public top-level names (classes + functions) of the fault-tolerance
+    module, by static scan — the supervisors and policies
+    ``docs/fault_tolerance.md`` documents. Underscore-prefixed names are
+    private and exempt; the scan is pinned against the runtime module in
+    ``tests/test_docs.py`` like the backend/plane registries."""
+    path = os.path.join(root, _FAULT_SRC)
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        return sorted(set(_PUBLIC_DEF_RE.findall(f.read())))
+
+
+def check_fault_tolerance_documented(root: str):
+    """Supervisor/policy↔docs drift: every public name in the
+    fault-tolerance module must appear backticked in
+    ``docs/fault_tolerance.md`` — a new supervisor or policy cannot land
+    undocumented, mirroring the backend and plane catalogs."""
+    names = fault_tolerance_api(root)
+    doc_path = os.path.join(root, _FAULT_DOC)
+    if not names:
+        return []
+    if not os.path.isfile(doc_path):
+        return [f"{_FAULT_DOC}: missing, but the fault-tolerance layer "
+                f"defines {len(names)} public names"]
+    with open(doc_path) as f:
+        text = f.read()
+    return [f"{_FAULT_DOC}: public fault-tolerance name `{n}` has no doc "
+            "entry (supervisor/policy↔docs drift)"
+            for n in names if f"`{n}`" not in text]
+
+
 def check_tree(root: str):
     errors = []
     for md in _md_files(root):
         errors.extend(check_file(md, root))
     errors.extend(check_registry_documented(root))
     errors.extend(check_planes_documented(root))
+    errors.extend(check_fault_tolerance_documented(root))
     return errors
 
 
@@ -233,9 +274,10 @@ def main(argv=None) -> int:
     n = len(list(_md_files(root)))
     nb = len(registry_backends(root))
     np_ = len(registry_planes(root))
+    nf = len(fault_tolerance_api(root))
     print(f"{'FAIL' if errors else 'OK'}: {n} markdown files + {nb} "
-          f"registered backends + {np_} registered data planes checked, "
-          f"{len(errors)} dangling references")
+          f"registered backends + {np_} registered data planes + {nf} "
+          f"fault-tolerance names checked, {len(errors)} dangling references")
     return 1 if errors else 0
 
 
