@@ -344,15 +344,17 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
 
     out_path = out_path or BENCH_JSON
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    # regenerating the per-backend cells must not drop the opt-in
-    # large_problem block (produced separately by bench_driver_large and
-    # much more expensive to recreate) — carry it over from the old file
+    # regenerating the per-backend cells must not drop the independently
+    # produced blocks (large_problem from bench_driver_large, streaming
+    # from bench_streaming — both separate, more expensive cells) — carry
+    # them over from the old file
     if os.path.exists(out_path):
         try:
             with open(out_path) as f:
-                old_lp = json.load(f).get("large_problem")
-            if old_lp is not None:
-                payload["large_problem"] = old_lp
+                old = json.load(f)
+            for block in ("large_problem", "streaming"):
+                if old.get(block) is not None:
+                    payload[block] = old[block]
         except (ValueError, OSError):
             pass  # unreadable old artifact: write the fresh payload as-is
     with open(out_path, "w") as f:
@@ -482,6 +484,124 @@ def bench_driver_large(iters: int = LARGE_ITERS_DEFAULT, out_path: str = None,
 
 
 # ---------------------------------------------------------------------------
+# Streaming out-of-core cell: a multi-epoch resumable run on the streaming
+# plane, in its own subprocess (tracemalloc must start before jax imports to
+# see the staging allocations, and the cell must not inherit the harness's
+# XLA_FLAGS). The claims it records: the prefetcher hides window generation
+# behind the compiled segments (prefetch_overlap_ratio), and the tile budget
+# keeps host staging below ONE dense window even though the stream shipped
+# `epochs` of them (peak_host_bytes < dense_xy_bytes, enforced by
+# validate_bench like the large_problem cell).
+# ---------------------------------------------------------------------------
+STREAM_ITERS_DEFAULT = 16
+STREAM_SEGMENT_DEFAULT = 4
+
+_STREAM_SCRIPT = r"""
+import os
+os.environ.pop("XLA_FLAGS", None)  # single default device: reference backend
+import json, resource, tempfile, time, tracemalloc
+tracemalloc.start()
+import jax
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import driver
+from repro.data.plane import StreamingDataPlane
+
+ITERS, SEG = %(iters)d, %(seg)d
+# big enough that one dense (N, M) window (160 MB) dwarfs import-time and
+# bookkeeping allocations, small enough for a CI smoke cell
+cfg = SoddaConfig(name="sodda-stream-20kx2k", P=4, Q=2, n=5_000, m=1_000,
+                  L=32, lr0=0.05)
+plane = StreamingDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q,
+                           # one window of blocks: the out-of-core regime —
+                           # epoch e+1's tiles evict epoch e's as the
+                           # prefetcher generates them
+                           resident_tile_budget=cfg.P * cfg.Q + cfg.P)
+stats = {}
+with tempfile.TemporaryDirectory() as ckpt:
+    t0 = time.perf_counter()
+    _, hist = driver.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                                   "reference", checkpoint_dir=ckpt,
+                                   segment_iters=SEG, record_every=SEG,
+                                   stream_stats=stats)
+    wall = time.perf_counter() - t0
+epochs = (ITERS + SEG - 1) // SEG
+cache = stats.pop("cache")
+print(json.dumps({
+    "problem": {"name": cfg.name, "P": cfg.P, "Q": cfg.Q, "N": cfg.N,
+                "M": cfg.M, "L": cfg.L, "loss": cfg.loss},
+    "backend": "reference", "plane": "streaming",
+    "iters": ITERS, "segment_iters": SEG, "epochs": epochs,
+    # whole-run wall time over iters — includes the one segment-program
+    # compile, which is the realistic cold-start a streaming run pays once
+    "us_per_iter": wall / ITERS * 1e6,
+    "final_loss": hist[-1][1],
+    "prefetch_overlap_ratio": stats.pop("overlap_ratio"),
+    "prefetch": stats,
+    "cache": cache,
+    "resident_tile_budget": plane.resident_tile_budget,
+    # tracemalloc tracks host-side (python/numpy) staging — what the budget
+    # bounds; XLA buffers live in RSS, reported alongside for transparency
+    "peak_host_bytes": tracemalloc.get_traced_memory()[1],
+    "rss_peak_bytes": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                      * 1024,
+    "dense_xy_bytes": plane.dense_nbytes,
+    "stream_total_bytes": epochs * plane.dense_nbytes,
+}))
+"""
+
+
+def run_streaming_cell(iters: int = STREAM_ITERS_DEFAULT,
+                       segment_iters: int = STREAM_SEGMENT_DEFAULT,
+                       timeout: int = 1200):
+    """Run the streaming cell in a fresh subprocess and return its
+    ``streaming`` payload dict (see validate_bench)."""
+    import subprocess, sys
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-c",
+         _STREAM_SCRIPT % {"iters": iters, "seg": segment_iters}],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if p.returncode != 0:
+        raise RuntimeError(f"streaming cell failed:\n{p.stderr[-2000:]}")
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def bench_streaming(iters: int = STREAM_ITERS_DEFAULT,
+                    segment_iters: int = STREAM_SEGMENT_DEFAULT,
+                    out_path: str = None):
+    """The streaming out-of-core cell, merged into BENCH_sodda.json as the
+    ``streaming`` block (fields documented in docs/benchmarks.md)."""
+    try:
+        cell = run_streaming_cell(iters=iters, segment_iters=segment_iters)
+    except Exception as e:  # pragma: no cover - depends on host capacity
+        reason = (str(e).splitlines() or ["?"])[0][:120]
+        row("driver_streaming", 0.0, f"WARN ({type(e).__name__}: {reason})")
+        return None
+    row("driver_streaming_scan", cell["us_per_iter"],
+        f"epochs={cell['epochs']} final_loss={cell['final_loss']:.4f} "
+        f"overlap={cell['prefetch_overlap_ratio']:.2f} "
+        f"peak_host_mb={cell['peak_host_bytes']/1e6:.1f} "
+        f"dense_mb={cell['dense_xy_bytes']/1e6:.1f} "
+        f"stream_total_mb={cell['stream_total_bytes']/1e6:.1f}")
+    out_path = out_path or BENCH_JSON
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+        payload["streaming"] = cell
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        row("driver_streaming_json", 0.0, os.path.relpath(out_path))
+    else:
+        row("driver_streaming_json", 0.0,
+            f"WARN {os.path.relpath(out_path)} missing - run the driver "
+            "bench first to merge the streaming block")
+    return cell
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary from the dry-run results (reads results/dryrun.json)
 # ---------------------------------------------------------------------------
 def bench_roofline_summary():
@@ -508,6 +628,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "driver": bench_driver,
     "driver_large": bench_driver_large,
+    "streaming": bench_streaming,
     "distributed_sodda": bench_distributed_sodda,
     "roofline_summary": bench_roofline_summary,
 }

@@ -10,6 +10,9 @@ rely on the shape without re-deriving it from the writer.
     # fail unless specific cells made it into the artifact (CI acceptance):
     PYTHONPATH=src python -m benchmarks.validate_bench \
         results/BENCH_sodda.json --require-backend async-mesh
+    # ...and/or the streaming out-of-core cell:
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        results/BENCH_sodda.json --require-streaming
 """
 from __future__ import annotations
 
@@ -107,6 +110,9 @@ def validate(payload: dict) -> dict:
     lp = payload.get("large_problem")
     if lp is not None:
         _check_large_problem(lp)
+    st = payload.get("streaming")
+    if st is not None:
+        _check_streaming(st)
     return payload
 
 
@@ -154,13 +160,73 @@ def _check_large_problem(lp):
               "tiled plane's acceptance criterion")
 
 
+def _check_streaming(st):
+    """The optional streaming out-of-core cell (bench_streaming).
+
+    A multi-epoch resumable run over the StreamingDataPlane: the cell's two
+    claims are the prefetch-overlap ratio (in [0, 1] by construction — the
+    fraction of window-placement wall time hidden behind compiled segments)
+    and bounded residency (host staging peak below ONE dense window even
+    though the stream shipped `epochs` of them).
+    """
+    ctx = "streaming"
+    if not isinstance(st, dict):
+        _fail(f"{ctx}: must be an object")
+    problem = st.get("problem")
+    if not isinstance(problem, dict):
+        _fail(f"{ctx}.problem: missing object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"{ctx}.problem.{k} must be {ty.__name__}, "
+                  f"got {problem.get(k)!r}")
+    if st.get("plane") != "streaming":
+        _fail(f"{ctx}.plane must be 'streaming', got {st.get('plane')!r}")
+    if not isinstance(st.get("backend"), str):
+        _fail(f"{ctx}.backend must be a string, got {st.get('backend')!r}")
+    for k in ("iters", "segment_iters", "resident_tile_budget"):
+        v = st.get(k)
+        if not isinstance(v, int) or v < 1:
+            _fail(f"{ctx}.{k} must be a positive int, got {v!r}")
+    ep = st.get("epochs")
+    if not isinstance(ep, int) or ep < 2:
+        _fail(f"{ctx}.epochs must be an int >= 2 (one window is not a "
+              f"stream — nothing to prefetch or evict), got {ep!r}")
+    for k in ("us_per_iter", "dense_xy_bytes", "stream_total_bytes"):
+        v = st.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            _fail(f"{ctx}.{k} must be positive, got {v!r}")
+    for k in ("peak_host_bytes", "rss_peak_bytes"):
+        v = st.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            _fail(f"{ctx}.{k} must be a non-negative number, got {v!r}")
+    fl = st.get("final_loss")
+    if not isinstance(fl, (int, float)):
+        _fail(f"{ctx}.final_loss must be a number, got {fl!r}")
+    ratio = st.get("prefetch_overlap_ratio")
+    if not isinstance(ratio, (int, float)) or not 0.0 <= ratio <= 1.0:
+        _fail(f"{ctx}.prefetch_overlap_ratio must be in [0, 1], "
+              f"got {ratio!r}")
+    if st["stream_total_bytes"] < st["dense_xy_bytes"] * ep:
+        _fail(f"{ctx}.stream_total_bytes ({st['stream_total_bytes']}) is "
+              f"below epochs x dense_xy_bytes "
+              f"({ep} x {st['dense_xy_bytes']}) — the stream did not ship "
+              "every window it claims")
+    if st["peak_host_bytes"] >= st["dense_xy_bytes"]:
+        _fail(f"{ctx}: peak_host_bytes ({st['peak_host_bytes']}) must be "
+              f"below one dense window ({st['dense_xy_bytes']}) — the "
+              "out-of-core acceptance criterion")
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     paths, required = [], []
+    require_streaming = False
     it = iter(argv)
     for a in it:
         if a == "--require-backend":
             required.append(next(it, None))
+        elif a == "--require-streaming":
+            require_streaming = True
         else:
             paths.append(a)
     if len(paths) != 1 or None in required:
@@ -172,6 +238,10 @@ def main(argv=None) -> int:
     if missing:
         print(f"FAIL {paths[0]}: required backend cells missing: {missing} "
               f"(have {sorted(payload['backends'])})")
+        return 1
+    if require_streaming and payload.get("streaming") is None:
+        print(f"FAIL {paths[0]}: required streaming cell missing "
+              "(run benchmarks.run --only streaming to produce it)")
         return 1
     n = len(payload["backends"])
     ref = payload["backends"].get("reference", {})

@@ -184,4 +184,7 @@ class CheckpointManager:
         if step is None:
             return 0, init_fn(), dict(extra_default or {})
         s, tree, extra = restore_checkpoint(self.directory, template, step)
-        return s, tree, extra
+        # defaults still apply on the restore path: a checkpoint written
+        # before a new extra key existed must not silently drop that key's
+        # default — saved values win, defaults fill the gaps
+        return s, tree, {**(extra_default or {}), **extra}

@@ -58,6 +58,19 @@ the default device otherwise). Placement is layout only; swapping planes
 with the same key cannot change the math (held BITWISE per backend in
 ``tests/test_conformance.py``). See ``docs/data.md``.
 
+Streaming planes (``plane.is_streaming``) add a time dimension to the
+contract: :func:`run` and :func:`run_python_loop` place the plane's current
+cursor window (epoch 0 by default — which is BITWISE the ``tiled`` plane's
+data, the conformance anchor), while :func:`run_resumable` advances the
+stream one epoch per segment: segment ``i`` consumes window ``i``
+(``epoch = done // segment_iters`` — a pure function of trajectory
+position, never of how the stream was consumed), placed ahead of time by a
+:class:`repro.data.plane.StreamPrefetcher` so window ``i+1`` generates and
+lands on device while segment ``i``'s compiled dispatch runs. The cursor is
+stamped into every checkpoint (``stream_epoch``) and cross-checked on
+restore, so a killed-and-resumed streaming run replays the exact window
+sequence — bitwise — of the uninterrupted one.
+
 :func:`run` keeps the exact ``(final_state, [(t, F(w^t))])`` contract of the
 legacy drivers (``engine.run`` / ``sodda.run`` / ``radisa.run_radisa_avg``
 are now thin wrappers over it). :func:`run_python_loop` preserves the old
@@ -195,9 +208,9 @@ def place_initial_state(state, cfg: SoddaConfig, backend: str, mesh=None):
         key=jax.device_put(state.key, NamedSharding(mesh, P())))
 
 
-def _placed_data(data, cfg: SoddaConfig, backend: str, mesh, options):
-    """Coerce `data` to a plane, validate it against `cfg`, and place it
-    through the backend bundle's ``place_data`` half."""
+def _checked_bundle(data, cfg: SoddaConfig, backend: str, mesh, options):
+    """Coerce `data` to a plane, validate it against `cfg`, and resolve the
+    backend bundle — the shared front half of every placement path."""
     from repro.data.plane import as_data_plane
 
     plane = as_data_plane(data)
@@ -205,7 +218,14 @@ def _placed_data(data, cfg: SoddaConfig, backend: str, mesh, options):
         raise ValueError(
             f"data plane shape ({plane.N}, {plane.M}) does not match cfg "
             f"{cfg.name!r} ({cfg.N}, {cfg.M})")
-    bundle = _cached_bundle(cfg, backend, mesh, options)
+    return plane, _cached_bundle(cfg, backend, mesh, options)
+
+
+def _placed_data(data, cfg: SoddaConfig, backend: str, mesh, options):
+    """:func:`_checked_bundle` plus placement through the bundle's
+    ``place_data`` half (the plane's current window — epoch 0 unless the
+    caller advanced a streaming plane's cursor)."""
+    plane, bundle = _checked_bundle(data, cfg, backend, mesh, options)
     return bundle, bundle.place_data(plane)
 
 
@@ -355,9 +375,14 @@ def _data_fingerprint(plane) -> str:
     (the guard is against silent mistakes, not adversaries). Content only,
     no plane kind: dense and tiled planes from the same key are the same
     data (placement is layout, never math), so either resumes the other.
+    Streaming planes are fingerprinted at their **epoch-0 window** so the
+    fingerprint is cursor-independent — where the stream currently points
+    is trajectory state (stamped separately as ``stream_epoch``), not data
+    identity.
     """
     import hashlib
 
+    plane = plane.at_epoch(0)  # no-op for static planes
     h = hashlib.sha256()
     h.update(repr((plane.N, plane.M, plane.P, plane.Q)).encode())
     h.update(np.asarray(plane.x_tile(0, 0)).tobytes())
@@ -380,7 +405,7 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                   backend: str = "reference", *, checkpoint_dir: str,
                   segment_iters: int, record_every: int = 1, mesh=None,
                   keep: int = 3, on_segment=None, on_segment_start=None,
-                  **options):
+                  stream_stats=None, **options):
     """:func:`run` split into checkpointed segments (ROADMAP "Driver-level
     checkpointing", the host-side version: chunk boundary = preemption
     point).
@@ -406,89 +431,169 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
     The segment supervisor (``repro.distributed.fault_tolerance``) also
     times segments between the two seams. Returns the exact
     ``(final_state, [(t, F(w^t)) history])`` contract of :func:`run`.
+
+    With a **streaming** plane the run is an epoch-reshuffled pass over the
+    stream: segment ``i`` trains on window ``i`` (one epoch per segment, so
+    checkpoint boundary = epoch boundary and the cursor is always
+    ``done // segment_iters``), with window ``i+1`` prefetched — generated
+    and placed on device by a background thread — while segment ``i``'s
+    compiled dispatch runs. The cursor rides every checkpoint as the
+    ``stream_epoch`` stamp and is cross-checked on restore. Pass a dict as
+    ``stream_stats`` to receive the prefetcher's overlap accounting
+    (``overlap_ratio``, ``place_s``, ``wait_s``, ...) and the plane's tile
+    cache counters after the run; ignored for static planes.
     """
     from repro.checkpoint import CheckpointManager, latest_step, \
         read_extra, restore_checkpoint
     from repro.core.sodda import init_state
+    from repro.data.plane import StreamPrefetcher
 
     _validate_segmenting(iters, segment_iters, record_every)
-    from repro.data.plane import as_data_plane
 
     opt_key = tuple(sorted(options.items()))
-    plane = as_data_plane(data)
-    bundle, (X, y) = _placed_data(plane, cfg, backend, mesh, opt_key)
+    plane, bundle = _checked_bundle(data, cfg, backend, mesh, opt_key)
     fingerprint = _data_fingerprint(plane)
     manager = CheckpointManager(checkpoint_dir, every=segment_iters,
                                 keep=keep)
+    prefetch = None
+    if plane.is_streaming:
+        prefetch = StreamPrefetcher(
+            lambda e: bundle.place_data(plane, epoch=e))
 
-    # the t=0 carry doubles as the restore template (same pytree structure
-    # and shardings as every later carry)
-    state0 = place_initial_state(init_state(jnp.array(key, copy=True), cfg.M),
-                                 cfg, backend, mesh)
-    carry = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
-    done, hist = 0, []
-    latest = latest_step(checkpoint_dir)
-    if latest is not None:
-        if latest > iters:
-            raise ValueError(
-                f"checkpoint at iteration {latest} in {checkpoint_dir!r} is "
-                f"beyond the requested iters={iters}")
-        # a checkpoint resumed under different run parameters would splice a
-        # mixed-cadence (or different-algorithm) history together without
-        # any numerical error to catch it: a changed staleness continues a
-        # different algorithm, a changed segment_iters strands `done` off
-        # the save cadence (maybe_save never fires again). Refuse BEFORE
-        # the template-shaped restore (a backend mismatch would otherwise
-        # surface as an opaque missing-leaf error).
-        _, extra = read_extra(checkpoint_dir, latest)
-        want = {"backend": backend, "record_every": record_every,
-                "segment_iters": segment_iters,
-                # JSON round-trips tuples as lists; normalize for comparison
-                "options": [list(kv) for kv in opt_key],
-                # same-shaped but different data would splice two problems
-                # into one trajectory just as silently...
-                "data": fingerprint,
-                # ...and a different seed would return the old seed's
-                # trajectory relabeled (the restored carry holds the RNG
-                # state; the key argument only builds the template)
-                "key": _key_stamp(key)}
-        for k, v in want.items():
-            if k in extra and extra[k] != v:
+    def stamp(done_now):
+        extra = {"history": [[t, f] for t, f in hist],
+                 "backend": backend,
+                 "record_every": record_every,
+                 "segment_iters": segment_iters,
+                 "options": [list(kv) for kv in opt_key],
+                 "data": fingerprint,
+                 "streaming": plane.is_streaming,
+                 "key": _key_stamp(key)}
+        if plane.is_streaming:
+            # the cursor of the next segment to run from this boundary
+            extra["stream_epoch"] = done_now // segment_iters
+        return extra
+
+    try:
+        # epoch 0 is both segment 0's window and the warm-up/template
+        # window; for static planes it is the only window there is
+        if prefetch is not None:
+            X, y = prefetch.consume(0)
+        else:
+            X, y = bundle.place_data(plane)
+
+        # the t=0 carry doubles as the restore template (same pytree
+        # structure and shardings as every later carry)
+        state0 = place_initial_state(
+            init_state(jnp.array(key, copy=True), cfg.M), cfg, backend, mesh)
+        carry = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
+        done, hist = 0, []
+        latest = latest_step(checkpoint_dir)
+        if latest is not None:
+            if latest > iters:
                 raise ValueError(
-                    f"checkpoint in {checkpoint_dir!r} was written with "
-                    f"{k}={extra[k]!r}; resuming with {k}={v!r} would "
-                    "corrupt the trajectory/history — use a fresh "
-                    "checkpoint_dir or the original parameters")
-        done, restored, extra = restore_checkpoint(checkpoint_dir, carry)
-        carry = jax.tree.map(
-            lambda leaf, proto: jax.device_put(leaf, proto.sharding),
-            restored, carry)
-        hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
+                    f"checkpoint at iteration {latest} in {checkpoint_dir!r} "
+                    f"is beyond the requested iters={iters}")
+            # a checkpoint resumed under different run parameters would
+            # splice a mixed-cadence (or different-algorithm) history
+            # together without any numerical error to catch it: a changed
+            # staleness continues a different algorithm, a changed
+            # segment_iters strands `done` off the save cadence (maybe_save
+            # never fires again). Refuse BEFORE the template-shaped restore
+            # (a backend mismatch would otherwise surface as an opaque
+            # missing-leaf error).
+            _, extra = read_extra(checkpoint_dir, latest)
+            want = {"backend": backend, "record_every": record_every,
+                    "segment_iters": segment_iters,
+                    # JSON round-trips tuples as lists; normalize
+                    "options": [list(kv) for kv in opt_key],
+                    # same-shaped but different data would splice two
+                    # problems into one trajectory just as silently...
+                    "data": fingerprint,
+                    # ...a static run resumed as a streaming one (or vice
+                    # versa) would change every window after the cursor...
+                    "streaming": plane.is_streaming,
+                    # ...and a different seed would return the old seed's
+                    # trajectory relabeled (the restored carry holds the
+                    # RNG state; the key argument only builds the template)
+                    "key": _key_stamp(key)}
+            # every guard key must be present: a stampless or partial stamp
+            # (hand-seeded dirs, pre-guard writers) proves nothing, and
+            # resuming with zero validation is exactly the silent-splice
+            # failure the guard exists to refuse
+            missing = sorted(set(want) - set(extra))
+            if missing:
+                raise ValueError(
+                    f"checkpoint in {checkpoint_dir!r} has no resume-guard "
+                    f"stamp for {missing}: cannot validate that the run "
+                    "parameters match, refusing to resume — use a fresh "
+                    "checkpoint_dir, or re-stamp the state via "
+                    "migrate_resumable")
+            for k, v in want.items():
+                if extra[k] != v:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} was written with "
+                        f"{k}={extra[k]!r}; resuming with {k}={v!r} would "
+                        "corrupt the trajectory/history — use a fresh "
+                        "checkpoint_dir or the original parameters")
+            if plane.is_streaming:
+                if "stream_epoch" not in extra:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} carries no "
+                        "stream_epoch cursor stamp: cannot restore the "
+                        "stream position, refusing to resume")
+                if int(extra["stream_epoch"]) != latest // segment_iters:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} stamps "
+                        f"stream_epoch={extra['stream_epoch']!r} but its "
+                        f"boundary at iteration {latest} implies epoch "
+                        f"{latest // segment_iters} — the stamp was "
+                        "tampered with or written by a different cadence")
+            done, restored, extra = restore_checkpoint(checkpoint_dir, carry)
+            carry = jax.tree.map(
+                lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+                restored, carry)
+            hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
 
-    while done < iters:
-        if on_segment_start is not None:
-            on_segment_start(done)
-        seg = min(segment_iters, iters - done)
-        compiled = _cached_segment_run(cfg, seg, backend, record_every, mesh,
-                                       opt_key)
-        carry, fs = compiled(carry, X, y)
-        hist += [(done + t, float(f))
-                 for t, f in zip(range(0, seg, record_every), np.asarray(fs))]
-        done += seg
-        manager.maybe_save(done, carry,
-                           extra={"history": [[t, f] for t, f in hist],
-                                  "backend": backend,
-                                  "record_every": record_every,
-                                  "segment_iters": segment_iters,
-                                  "options": [list(kv) for kv in opt_key],
-                                  "data": fingerprint,
-                                  "key": _key_stamp(key)})
-        if on_segment is not None:
-            on_segment(done)
+        while done < iters:
+            if on_segment_start is not None:
+                on_segment_start(done)
+            seg = min(segment_iters, iters - done)
+            if prefetch is not None:
+                # consume this segment's window (already resident unless
+                # this is the first segment after a cold start/resume),
+                # then issue the next one so it generates and lands on
+                # device underneath this segment's compiled dispatch
+                X, y = prefetch.consume(done // segment_iters)
+                if done + seg < iters:
+                    prefetch.issue(done // segment_iters + 1)
+            compiled = _cached_segment_run(cfg, seg, backend, record_every,
+                                           mesh, opt_key)
+            carry, fs = compiled(carry, X, y)
+            hist += [(done + t, float(f))
+                     for t, f in zip(range(0, seg, record_every),
+                                     np.asarray(fs))]
+            done += seg
+            manager.maybe_save(done, carry, extra=stamp(done))
+            if on_segment is not None:
+                on_segment(done)
 
-    final = bundle.finalize(carry)
-    hist.append((iters, float(_cached_objective(cfg.loss)(X, y, final.w))))
-    return final, hist
+        if prefetch is not None:
+            # the final objective must see the last segment's window — on
+            # the normal path it is the one just consumed (free), on a
+            # resume-from-complete the loop never ran and it is regenerated
+            X, y = prefetch.consume((iters - 1) // segment_iters
+                                    if iters > 0 else 0)
+            if stream_stats is not None:
+                stream_stats.update(prefetch.stats())
+                stream_stats["cache"] = plane.cache_stats
+        final = bundle.finalize(carry)
+        hist.append((iters,
+                     float(_cached_objective(cfg.loss)(X, y, final.w))))
+        return final, hist
+    finally:
+        if prefetch is not None:
+            prefetch.close()
 
 
 def migrate_resumable(key, data, cfg: SoddaConfig, done: int, state,
@@ -526,13 +631,14 @@ def migrate_resumable(key, data, cfg: SoddaConfig, done: int, state,
     placed = place_initial_state(
         SoddaState(w=state.w, t=state.t, key=state.key), cfg, backend, mesh)
     carry = _cached_init_carry(cfg, backend, mesh, opt_key)(placed, X, y)
-    save_checkpoint(
-        checkpoint_dir, done, carry,
-        extra={"history": [[int(t), float(f)] for t, f in history],
-               "backend": backend, "record_every": record_every,
-               "segment_iters": segment_iters,
-               "options": [list(kv) for kv in opt_key],
-               "data": _data_fingerprint(plane),
-               "key": _key_stamp(key)},
-        keep=keep)
+    extra = {"history": [[int(t), float(f)] for t, f in history],
+             "backend": backend, "record_every": record_every,
+             "segment_iters": segment_iters,
+             "options": [list(kv) for kv in opt_key],
+             "data": _data_fingerprint(plane),
+             "streaming": plane.is_streaming,
+             "key": _key_stamp(key)}
+    if plane.is_streaming:
+        extra["stream_epoch"] = done // segment_iters
+    save_checkpoint(checkpoint_dir, done, carry, extra=extra, keep=keep)
     return carry

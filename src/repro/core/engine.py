@@ -165,13 +165,16 @@ class StepBundle(NamedTuple):
     Factories normally leave it ``None`` and :func:`make_bundle` fills in
     the placement matched to the backend's resolved mesh, so "which worker
     holds which block" is decided by the data plane, not re-derived per
-    backend.
+    backend. For streaming planes ``place_data(data, epoch=e)`` places
+    stream window ``e`` (``epoch=None`` places the plane's current cursor);
+    the resumable driver's prefetcher calls this half on its worker thread
+    — one placed window per epoch, the streaming half of the seam.
     """
 
     step: StepFn  # (carry, X, y) -> carry
     init_carry: Callable  # (SoddaState, X, y) -> carry
     finalize: Callable  # carry -> SoddaState
-    place_data: Optional[Callable] = None  # DataPlane | (X, y) -> (X, y)
+    place_data: Optional[Callable] = None  # DataPlane | (X, y)[, epoch] -> (X, y)
 
 
 def _as_bundle(obj) -> StepBundle:
@@ -182,9 +185,10 @@ def _as_bundle(obj) -> StepBundle:
                       finalize=lambda carry: carry)
 
 
-def _place_data(backend: str, mesh, data):
+def _place_data(backend: str, mesh, data, epoch=None):
     from repro.data.plane import as_data_plane
-    return as_data_plane(data).materialize_for(backend, mesh=mesh)
+    return as_data_plane(data).materialize_for(backend, mesh=mesh,
+                                               epoch=epoch)
 
 
 BackendFactory = Callable[[SoddaConfig, EngineOptions], StepFn]

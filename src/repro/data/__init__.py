@@ -1,22 +1,29 @@
-from repro.data.plane import (DataPlane, DenseDataPlane, TiledDataPlane,
-                              as_data_plane, available_planes, make_plane,
-                              register_plane)
-from repro.data.synthetic import (make_svm_data, svm_feature_block_z,
-                                  svm_label_block, svm_tile_x)
+from repro.data.plane import (DataPlane, DenseDataPlane, StreamingDataPlane,
+                              StreamPrefetcher, TiledDataPlane, as_data_plane,
+                              available_planes, make_plane, register_plane)
+from repro.data.synthetic import (make_svm_data, stream_epoch_key,
+                                  svm_feature_block_z, svm_label_block,
+                                  svm_stream_label_block, svm_stream_tile_x,
+                                  svm_tile_x)
 from repro.data.tokens import synthetic_token_batch, TokenPipeline
 
 __all__ = [
     "DataPlane",
     "DenseDataPlane",
+    "StreamingDataPlane",
+    "StreamPrefetcher",
     "TiledDataPlane",
     "as_data_plane",
     "available_planes",
     "make_plane",
     "register_plane",
     "make_svm_data",
+    "stream_epoch_key",
     "svm_tile_x",
     "svm_label_block",
     "svm_feature_block_z",
+    "svm_stream_tile_x",
+    "svm_stream_label_block",
     "synthetic_token_batch",
     "TokenPipeline",
 ]

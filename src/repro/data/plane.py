@@ -20,21 +20,33 @@ the primitive instead:
   the default device for the single-host ones. Which node holds which block
   is decided here, once — not re-derived by every backend.
 
-Two implementations:
+Three implementations:
 
-``dense``  (:class:`DenseDataPlane`) — current behavior: wraps host-global
-           arrays (or builds them from the canonical tile generator via
-           :meth:`DenseDataPlane.from_key`). Peak host memory: the full
-           ``(N, M)`` footprint.
-``tiled``  (:class:`TiledDataPlane`) — sharded-on-creation: every tile is
-           generated on demand from its ``fold_in``-derived key
-           (``repro.data.synthetic.svm_tile_x``) and placed directly into
-           its device's shard; no global array ever exists on the host.
-           Generation is bitwise-identical to the corresponding slice of a
-           ``dense`` plane built from the same key, for any mesh shape —
-           so swapping planes cannot change the math, only the memory
-           model (property-tested in ``tests/test_property.py``, held
-           BITWISE across every backend in ``tests/test_conformance.py``).
+``dense``      (:class:`DenseDataPlane`) — current behavior: wraps
+               host-global arrays (or builds them from the canonical tile
+               generator via :meth:`DenseDataPlane.from_key`). Peak host
+               memory: the full ``(N, M)`` footprint.
+``tiled``      (:class:`TiledDataPlane`) — sharded-on-creation: every tile
+               is generated on demand from its ``fold_in``-derived key
+               (``repro.data.synthetic.svm_tile_x``) and placed directly
+               into its device's shard; no global array ever exists on the
+               host. Generation is bitwise-identical to the corresponding
+               slice of a ``dense`` plane built from the same key, for any
+               mesh shape — so swapping planes cannot change the math, only
+               the memory model (property-tested in
+               ``tests/test_property.py``, held BITWISE across every
+               backend in ``tests/test_conformance.py``).
+``streaming``  (:class:`StreamingDataPlane`) — the first plane whose
+               contents change over time: an unbounded sequence of
+               epoch-reshuffled ``(N, M)`` windows, window ``e`` generated
+               from the epoch key ``stream_epoch_key(key, e)`` (epoch 0 is
+               BITWISE the ``tiled`` plane — the anchor proving the time
+               dimension changed no math). Out-of-core by construction:
+               only the window under the cursor (plus a prefetched next
+               window, see :class:`StreamPrefetcher`) is ever resident, and
+               a configurable ``resident_tile_budget`` bounds the host-side
+               tile cache with regenerate-on-miss, so streams exceeding
+               any single memory run at all.
 
 The contract, key-derivation scheme, and memory model are documented in
 ``docs/data.md``; the registry below is statically scanned by
@@ -43,6 +55,11 @@ The contract, key-derivation scheme, and memory model are documented in
 from __future__ import annotations
 
 import abc
+import copy
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional, Tuple, Type
 
 import jax
@@ -54,6 +71,8 @@ from repro.data import synthetic
 __all__ = [
     "DataPlane",
     "DenseDataPlane",
+    "StreamingDataPlane",
+    "StreamPrefetcher",
     "TiledDataPlane",
     "as_data_plane",
     "available_planes",
@@ -111,6 +130,10 @@ class DataPlane(abc.ABC):
     P: int
     Q: int
     dtype = jnp.float32
+    # True for planes whose contents advance over epochs (the driver's
+    # resumable segment loop checks this to thread an epoch cursor through
+    # placement and the checkpoint stamp)
+    is_streaming = False
 
     def _init_grid(self, N: int, M: int, P: int, Q: int):
         if P < 1 or Q < 1 or N % P or M % Q:
@@ -131,8 +154,18 @@ class DataPlane(abc.ABC):
 
     @property
     def dense_nbytes(self) -> int:
-        """The host footprint a dense (N, M) + (N,) materialization costs."""
-        return 4 * (self.N * self.M + self.N)
+        """The host footprint a dense (N, M) + (N,) materialization costs.
+
+        Derived from the plane's ``dtype`` (not a hard-coded 4) so the
+        memory-model claims in the bench output stay honest for non-f32
+        planes.
+        """
+        return jnp.dtype(self.dtype).itemsize * (self.N * self.M + self.N)
+
+    @property
+    def tile_nbytes(self) -> int:
+        """The footprint of one (n, m) feature tile."""
+        return jnp.dtype(self.dtype).itemsize * self.n * self.m
 
     @abc.abstractmethod
     def x_tile(self, p: int, q: int):
@@ -141,6 +174,21 @@ class DataPlane(abc.ABC):
     @abc.abstractmethod
     def y_block(self, p: int):
         """The (n,) label block of observation partition p."""
+
+    # -- the time dimension -------------------------------------------------
+    def at_epoch(self, epoch: int) -> "DataPlane":
+        """This plane's window at stream epoch `epoch`.
+
+        A static plane has exactly one window — epoch 0 returns the plane
+        itself, anything else is a loud error (a driver advancing a cursor
+        through a plane that cannot move must not silently re-run the same
+        data). Streaming planes override this with a cheap epoch view.
+        """
+        if epoch != 0:
+            raise ValueError(
+                f"{type(self).__name__} is static: it has no epoch "
+                f"{epoch}, only the single window at epoch 0")
+        return self
 
     # -- placement ----------------------------------------------------------
     def materialize(self):
@@ -152,18 +200,21 @@ class DataPlane(abc.ABC):
         y = jnp.concatenate([self.y_block(p) for p in range(self.P)])
         return X, y
 
-    def materialize_for(self, backend: str, mesh=None):
+    def materialize_for(self, backend: str, mesh=None, epoch=None):
         """``(X, y)`` placed the way `backend`'s step consumes them.
 
         With a mesh: global-shaped arrays sharded ``P('data','model')`` /
         ``P('data')`` over it — the exact in_specs of the distributed step,
         so dispatch moves no bytes. Without one: the assembled arrays on
         the default device. Placement is layout only; the values are
-        bitwise-independent of it.
+        bitwise-independent of it. ``epoch`` selects a stream window
+        (:meth:`at_epoch`); ``None`` means the plane's current cursor —
+        epoch 0 for static planes.
         """
+        plane = self if epoch is None else self.at_epoch(epoch)
         if mesh is None:
-            return self.materialize()
-        return self._materialize_mesh(mesh)
+            return plane.materialize()
+        return plane._materialize_mesh(mesh)
 
     def _materialize_mesh(self, mesh):
         from repro.core.distributed import data_shardings
@@ -220,6 +271,9 @@ class DenseDataPlane(DataPlane):
                 f"need X (N, M) and y (N,), got {X.shape} / {y.shape}")
         self._init_grid(X.shape[0], X.shape[1], grid[0], grid[1])
         self._X, self._y = X, y
+        # the footprint metadata (dense_nbytes/tile_nbytes) must describe
+        # the arrays actually wrapped, not the class default
+        self.dtype = X.dtype
 
     @classmethod
     def from_key(cls, key, N: int, M: int, P: int, Q: int,
@@ -291,6 +345,226 @@ class TiledDataPlane(DataPlane):
             raise IndexError(f"row block {p} outside grid P={self.P}")
         return synthetic.svm_label_block(self._key, p, self.n, self.Q,
                                          self.m, flip_prob=self._flip_prob)
+
+
+@register_plane("streaming")
+class StreamingDataPlane(DataPlane):
+    """Epoch-reshuffled out-of-core plane: the window under the cursor.
+
+    The stream is an unbounded sequence of ``(N, M)`` windows; window
+    (epoch) ``e`` regenerates every tile from the epoch key
+    ``repro.data.synthetic.stream_epoch_key(key, e)`` — fresh observations
+    of the same planted separator every epoch, production traffic that
+    never fits and never stops. Three properties carry the whole design:
+
+    * **epoch 0 is the ``tiled`` plane, bitwise** — the anchor proving the
+      time dimension changed no math (held per backend in
+      ``tests/test_conformance.py``);
+    * **a tile is a pure function of (key, epoch, p, q, n, m)** — never of
+      how the stream was consumed — so a killed-and-resumed streaming run
+      replays the exact bytes once the driver restores the stream cursor
+      from the checkpoint stamp (``driver.run_resumable``);
+    * **bounded residency** — tiles materialize through a host-side LRU
+      cache capped at ``resident_tile_budget`` blocks (X tiles and y
+      blocks alike; default two windows' worth — the consumed one plus the
+      prefetched one) and are *regenerated on miss* (a PRNG replay), so
+      peak host memory is a knob, not a function of stream length.
+
+    :meth:`at_epoch` returns a cheap cursor view (shared cache, shared
+    budget) — the handle :class:`StreamPrefetcher` places the *next*
+    window through while the compiled segment consumes the current one.
+    """
+
+    is_streaming = True
+
+    def __init__(self, key, N: int, M: int, P: int, Q: int,
+                 flip_prob: float = 0.01,
+                 resident_tile_budget: Optional[int] = None, epoch: int = 0):
+        self._init_grid(N, M, P, Q)
+        if resident_tile_budget is None:
+            # current + prefetched window: P*Q X tiles + P y blocks each
+            resident_tile_budget = 2 * (P * Q + P)
+        if resident_tile_budget < 0:
+            raise ValueError(
+                f"resident_tile_budget must be >= 0 (0 disables caching), "
+                f"got {resident_tile_budget}")
+        if epoch < 0:
+            raise ValueError(f"stream epoch must be >= 0, got {epoch}")
+        self._key = key
+        self._flip_prob = flip_prob
+        self._epoch = int(epoch)
+        self._budget = int(resident_tile_budget)
+        # shared (not copied) by at_epoch views: the cache IS the resident
+        # set, whichever cursor touched it last
+        self._cache: OrderedDict = OrderedDict()
+        self._cache_lock = threading.Lock()
+        self._stats = {"hits": 0, "misses": 0}
+
+    @classmethod
+    def from_key(cls, key, N: int, M: int, P: int, Q: int,
+                 flip_prob: float = 0.01,
+                 **kwargs) -> "StreamingDataPlane":
+        return cls(key, N, M, P, Q, flip_prob=flip_prob, **kwargs)
+
+    @property
+    def epoch(self) -> int:
+        """The stream cursor this view reads at."""
+        return self._epoch
+
+    @property
+    def resident_tile_budget(self) -> int:
+        return self._budget
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """``{'hits', 'misses', 'resident'}`` of the shared tile cache —
+        misses are regenerations (the out-of-core price of the budget)."""
+        with self._cache_lock:
+            return dict(self._stats, resident=len(self._cache))
+
+    def at_epoch(self, epoch: int) -> "StreamingDataPlane":
+        """A view of the same stream with the cursor at `epoch` (shared
+        cache and stats; O(1), nothing is generated until a tile is read)."""
+        if epoch < 0:
+            raise ValueError(f"stream epoch must be >= 0, got {epoch}")
+        if epoch == self._epoch:
+            return self
+        view = copy.copy(self)  # shares _cache/_cache_lock/_stats
+        view._epoch = int(epoch)
+        return view
+
+    def _block(self, make, cache_key):
+        """Budget-bounded LRU materialization with regenerate-on-miss."""
+        with self._cache_lock:
+            if cache_key in self._cache:
+                self._cache.move_to_end(cache_key)
+                self._stats["hits"] += 1
+                return self._cache[cache_key]
+            self._stats["misses"] += 1
+        val = make()  # generate outside the lock: a PRNG replay, not I/O
+        if self._budget:
+            with self._cache_lock:
+                self._cache[cache_key] = val
+                self._cache.move_to_end(cache_key)
+                while len(self._cache) > self._budget:
+                    self._cache.popitem(last=False)
+        return val
+
+    def x_tile_at(self, epoch: int, p: int, q: int):
+        """The (n, m) feature tile of worker (p, q) at stream `epoch`."""
+        if not (0 <= p < self.P and 0 <= q < self.Q):
+            raise IndexError(f"tile ({p}, {q}) outside grid "
+                             f"({self.P}, {self.Q})")
+        if epoch < 0:
+            raise ValueError(f"stream epoch must be >= 0, got {epoch}")
+        return self._block(
+            lambda: synthetic.svm_stream_tile_x(self._key, epoch, p, q,
+                                                self.n, self.m),
+            (epoch, "x", p, q))
+
+    def y_block_at(self, epoch: int, p: int):
+        """The (n,) label block of partition p at stream `epoch`."""
+        if not 0 <= p < self.P:
+            raise IndexError(f"row block {p} outside grid P={self.P}")
+        if epoch < 0:
+            raise ValueError(f"stream epoch must be >= 0, got {epoch}")
+        return self._block(
+            lambda: synthetic.svm_stream_label_block(
+                self._key, epoch, p, self.n, self.Q, self.m,
+                flip_prob=self._flip_prob),
+            (epoch, "y", p))
+
+    def x_tile(self, p: int, q: int):
+        return self.x_tile_at(self._epoch, p, q)
+
+    def y_block(self, p: int):
+        return self.y_block_at(self._epoch, p)
+
+
+class StreamPrefetcher:
+    """Double-buffered issue/consume feed over a streaming plane's epochs.
+
+    The same idiom the async backends use for their exchange collective,
+    lifted to the data plane: :meth:`issue` schedules epoch ``e``'s window
+    — tile generation plus host→device placement — on a single worker
+    thread, so it overlaps the compiled segment the consumer is currently
+    running; :meth:`consume` blocks until the window is ready, retires
+    every strictly older window (bounding residency to current +
+    prefetched — the double buffer), and keeps the consumed one so
+    repeated consumes of the same epoch are free.
+
+    ``place`` is the placement half — typically the engine bundle's
+    ``place_data`` closed over the plane: ``lambda e:
+    bundle.place_data(plane, epoch=e)``.
+
+    The prefetch-overlap ratio the streaming bench cell records is
+    ``1 - wait_s / place_s``: the fraction of placement wall-time hidden
+    behind compute (1.0 = every consume found its window already resident,
+    0.0 = fully synchronous cold loads).
+    """
+
+    def __init__(self, place):
+        self._place = place
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="stream-prefetch")
+        self._pending: Dict[int, object] = {}  # epoch -> Future
+        self._lock = threading.Lock()
+        self.place_s = 0.0   # worker wall-time spent generating + placing
+        self.wait_s = 0.0    # consumer wall-time blocked on a window
+        self.consumed = 0
+        self.cold_misses = 0  # consume() of a never-issued epoch
+
+    def issue(self, epoch: int):
+        """Schedule epoch's window on the worker thread (idempotent)."""
+        with self._lock:
+            if epoch in self._pending:
+                return
+            self._pending[epoch] = self._pool.submit(self._job, epoch)
+
+    def _job(self, epoch: int):
+        t0 = time.perf_counter()
+        out = self._place(epoch)
+        self.place_s += time.perf_counter() - t0  # single worker: no race
+        return out
+
+    def consume(self, epoch: int):
+        """The placed ``(X, y)`` of `epoch`; blocks if still in flight."""
+        with self._lock:
+            fut = self._pending.get(epoch)
+        if fut is None:
+            self.cold_misses += 1
+            self.issue(epoch)
+            with self._lock:
+                fut = self._pending[epoch]
+        t0 = time.perf_counter()
+        out = fut.result()
+        self.wait_s += time.perf_counter() - t0
+        self.consumed += 1
+        with self._lock:  # retire strictly older windows (double buffer)
+            for e in [e for e in self._pending if e < epoch]:
+                del self._pending[e]
+        return out
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of placement time hidden behind compute, in [0, 1]."""
+        if self.place_s <= 0.0:
+            return 1.0
+        return max(0.0, min(1.0, 1.0 - self.wait_s / self.place_s))
+
+    def stats(self) -> Dict[str, float]:
+        return {"place_s": self.place_s, "wait_s": self.wait_s,
+                "consumed": self.consumed, "cold_misses": self.cold_misses,
+                "overlap_ratio": self.overlap_ratio}
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
 
 def as_data_plane(data) -> DataPlane:

@@ -22,6 +22,19 @@ Two generation paths share this module:
   local operation (the empirical ``std(axis=0)`` would be a cross-tile
   reduction over the whole column) that is also immune to the ``std == 0``
   degeneracy of the empirical path by construction.
+* the **stream** functions (:func:`stream_epoch_key`,
+  :func:`svm_stream_tile_x`, :func:`svm_stream_label_block`) — the
+  epoch-reshuffled variant behind the ``streaming`` data plane. Epoch ``e``
+  of the stream is the tile scheme above run under the epoch-derived base
+  key ``stream_epoch_key(key, e)`` (the base key itself at epoch 0, so the
+  stream's first window is BITWISE the static ``tiled`` plane's data;
+  ``fold_in(key, e)`` for every later epoch), except that the planted
+  separator ``z`` always comes from the *base* key: the stream draws fresh
+  observations of the same ground-truth model every epoch — production
+  traffic, not a sequence of unrelated problems. A stream tile is therefore
+  a pure function of ``(key, epoch, p, q, n, m)``, which is what keeps the
+  streaming run's bitwise-resume story: batch *i* never depends on how the
+  stream was consumed, only on where the cursor points.
 """
 from __future__ import annotations
 
@@ -104,5 +117,54 @@ def svm_label_block(key, p: int, n: int, Q: int, m: int,
     y = jnp.sign(zdot)
     y = jnp.where(y == 0, 1.0, y)
     _, _, kf = _tile_keys(key)
+    flips = jax.random.bernoulli(jax.random.fold_in(kf, p), flip_prob, (n,))
+    return jnp.where(flips, -y, y).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-reshuffled stream generation: the canonical path of the `streaming`
+# data plane. Epoch e is the tile scheme above re-run under the epoch key —
+# fresh observations every epoch, drawn against the SAME planted separator z
+# (the ground truth a production stream keeps sampling).
+# ---------------------------------------------------------------------------
+def stream_epoch_key(key, epoch: int):
+    """The base key of stream epoch `epoch`.
+
+    Epoch 0 is the base key itself — the stream's first window is therefore
+    BITWISE the static ``tiled`` plane's data (the conformance anchor that
+    proves adding the time dimension changed no math). Every later epoch
+    folds the epoch index in, so the full tile key chain is
+    ``fold_in(fold_in(fold_in(key, epoch), p), q)`` (modulo the kx split) —
+    a pure function of (key, epoch), independent of consumption order.
+    """
+    if epoch < 0:
+        raise ValueError(f"stream epoch must be >= 0, got {epoch}")
+    return key if epoch == 0 else jax.random.fold_in(key, epoch)
+
+
+def svm_stream_tile_x(key, epoch: int, p: int, q: int, n: int, m: int,
+                      standardize: bool = True):
+    """The (n, m) feature tile of worker (p, q) at stream epoch `epoch`."""
+    return svm_tile_x(stream_epoch_key(key, epoch), p, q, n, m,
+                      standardize=standardize)
+
+
+def svm_stream_label_block(key, epoch: int, p: int, n: int, Q: int, m: int,
+                           flip_prob: float = 0.01):
+    """The (n,) label block of partition p at stream epoch `epoch`.
+
+    The observations (and the flip mask) are epoch-fresh, but the planted
+    separator blocks come from the *base* key: every epoch labels its new
+    rows against the same ground-truth z, like :func:`svm_label_block` does
+    for the static planes. At epoch 0 this degenerates to
+    ``svm_label_block(key, ...)`` exactly (bitwise)."""
+    ekey = stream_epoch_key(key, epoch)
+    zdot = jnp.zeros((n,), jnp.float32)
+    for q in range(Q):
+        zdot = zdot + svm_tile_x(ekey, p, q, n, m, standardize=False) \
+            @ svm_feature_block_z(key, q, m)
+    y = jnp.sign(zdot)
+    y = jnp.where(y == 0, 1.0, y)
+    _, _, kf = _tile_keys(ekey)
     flips = jax.random.bernoulli(jax.random.fold_in(kf, p), flip_prob, (n,))
     return jnp.where(flips, -y, y).astype(jnp.float32)

@@ -218,6 +218,81 @@ def test_schema_rejects_large_problem_violations(mutate, match):
         validate_bench.validate(payload)
 
 
+def _valid_streaming():
+    return {
+        "problem": {"name": "sodda-stream-20kx2k", "P": 4, "Q": 2,
+                    "N": 20_000, "M": 2_000, "L": 32, "loss": "hinge"},
+        "backend": "reference", "plane": "streaming",
+        "iters": 16, "segment_iters": 4, "epochs": 4,
+        "us_per_iter": 2e4, "final_loss": 0.3,
+        "prefetch_overlap_ratio": 0.7,
+        "prefetch": {"place_s": 1.0, "wait_s": 0.3, "consumed": 4,
+                     "cold_misses": 1},
+        "cache": {"hits": 10, "misses": 40, "resident": 10},
+        "resident_tile_budget": 12,
+        "peak_host_bytes": 5.0e7, "rss_peak_bytes": 1.0e9,
+        "dense_xy_bytes": 1.6e8, "stream_total_bytes": 6.4e8,
+    }
+
+
+def test_schema_accepts_streaming_block():
+    payload = _valid_payload()
+    payload["streaming"] = _valid_streaming()
+    assert validate_bench.validate(payload)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda st: st.update(plane="tiled"), "plane"),
+    (lambda st: st.update(epochs=1), "epochs"),  # one window is not a stream
+    (lambda st: st.update(segment_iters=0), "segment_iters"),
+    (lambda st: st.update(prefetch_overlap_ratio=1.5), "overlap"),
+    (lambda st: st.update(prefetch_overlap_ratio=-0.1), "overlap"),
+    (lambda st: st.pop("final_loss"), "final_loss"),
+    (lambda st: st["problem"].pop("M"), "problem.M"),
+    # the shipped volume must cover epochs windows
+    (lambda st: st.update(stream_total_bytes=1.0e8), "stream_total_bytes"),
+    # the out-of-core acceptance criterion: staging undercuts one window
+    (lambda st: st.update(peak_host_bytes=2.0e8), "below one dense"),
+])
+def test_schema_rejects_streaming_violations(mutate, match):
+    payload = _valid_payload()
+    payload["streaming"] = _valid_streaming()
+    mutate(payload["streaming"])
+    with pytest.raises(validate_bench.BenchSchemaError, match=match):
+        validate_bench.validate(payload)
+
+
+def test_validate_cli_require_streaming(tmp_path, capsys):
+    """--require-streaming: CI acceptance that the streaming cell actually
+    materialized (it degrades to a WARN row on hosts that cannot run it)."""
+    import json
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(_valid_payload()))
+    assert validate_bench.main([str(bare)]) == 0
+    assert validate_bench.main([str(bare), "--require-streaming"]) == 1
+    assert "streaming" in capsys.readouterr().out
+    full_payload = _valid_payload()
+    full_payload["streaming"] = _valid_streaming()
+    full = tmp_path / "full.json"
+    full.write_text(json.dumps(full_payload))
+    assert validate_bench.main([str(full), "--require-streaming"]) == 0
+
+
+def test_bench_driver_preserves_streaming_block(monkeypatch, tmp_path):
+    """Regenerating the per-backend cells must carry the streaming block
+    over, exactly like large_problem (the regression this PR fixes for
+    separately-produced cells)."""
+    import json
+    monkeypatch.setattr(bench_run, "_resolve_driver_backends",
+                        lambda cfg: (["reference"], False))
+    out = tmp_path / "b.json"
+    out.write_text(json.dumps({"schema": "bench_sodda/v1",
+                               "streaming": _valid_streaming()}))
+    payload = bench_run.bench_driver(iters=2, reps=1, out_path=str(out))
+    assert payload["streaming"] == _valid_streaming()
+    assert json.loads(out.read_text())["streaming"] == _valid_streaming()
+
+
 # ---------------------------------------------------------------------------
 # tools/bench_trend.py: the us/iter regression gate between two artifacts.
 # ---------------------------------------------------------------------------
@@ -281,6 +356,31 @@ def test_bench_trend_usage_errors(tmp_path):
     broken = tmp_path / "broken.json"
     broken.write_text("{not json")
     assert bench_trend.main([b, str(broken)]) == 2
+
+
+def test_bench_trend_help_exits_zero(capsys):
+    """--help is a successful invocation, not a usage error (the satellite
+    fix: argparse's SystemExit(0) was previously swallowed into exit 2)."""
+    assert bench_trend.main(["--help"]) == 0
+    assert "usage" in capsys.readouterr().out.lower()
+
+
+def test_bench_trend_empty_backends_is_incomparable(tmp_path, capsys):
+    """An artifact with an empty (or missing) backends map carries zero
+    measurements — a trend against it must refuse (exit 3), not
+    vacuously pass (the satellite fix)."""
+    base = _valid_payload()
+    empty = copy.deepcopy(base)
+    empty["backends"] = {}
+    b = _write(tmp_path, "b.json", base)
+    e = _write(tmp_path, "e.json", empty)
+    assert bench_trend.main([b, e]) == 3
+    assert "INCOMPARABLE" in capsys.readouterr().out
+    assert bench_trend.main([e, b]) == 3  # either side
+    missing = copy.deepcopy(base)
+    del missing["backends"]
+    assert bench_trend.main(
+        [b, _write(tmp_path, "m.json", missing)]) == 3
 
 
 def test_bench_trend_identical_artifacts_pass(tmp_path):

@@ -104,6 +104,24 @@ def test_gc_keep_counts_only_committed(tmp_path):
     assert latest_step(d) == 7
 
 
+def test_restore_or_init_merges_extra_default(tmp_path):
+    """Satellite fix: ``extra_default`` applies on BOTH paths. A checkpoint
+    written before a new extra key existed must come back with that key's
+    default filled in — and saved values must win over defaults."""
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d)
+    # init path: no checkpoint yet — defaults verbatim
+    step, _, extra = mgr.restore_or_init(tree(), tree,
+                                         extra_default={"cursor": 0})
+    assert step == 0 and extra == {"cursor": 0}
+    save_checkpoint(d, 4, tree(), extra={"cursor": 2})
+    # restore path: the saved value wins, the new key's default fills in
+    step, _, extra = mgr.restore_or_init(
+        tree(), tree, extra_default={"cursor": 0, "new_knob": "x"})
+    assert step == 4
+    assert extra == {"cursor": 2, "new_knob": "x"}
+
+
 def test_read_extra_missing_or_uncommitted_step(tmp_path):
     from repro.checkpoint import read_extra
     d = str(tmp_path / "ckpt")

@@ -379,6 +379,26 @@ def test_driver_plane_choice_is_bitwise_invariant(backend, request):
                                   err_msg=f"{backend}: final iterate diverged")
 
 
+@pytest.mark.parametrize("backend", DRIVER_BACKENDS)
+def test_driver_streaming_epoch_zero_is_bitwise_tiled(backend, request):
+    """The streaming plane's conformance anchor: at its epoch-0 cursor the
+    stream IS the tiled plane (the epoch key degenerates to the base key),
+    so a plain `driver.run` — which places the current window once — must
+    be BITWISE the tiled run for every backend. The time dimension changes
+    no math until the cursor moves."""
+    cfg = _cfg("hinge", "diminishing")
+    kw = _driver_kwargs(backend, request)
+    key = jax.random.PRNGKey(1)
+    s_tiled, h_tiled = driver.run(key, make_data_plane(cfg, "tiled"), cfg,
+                                  CONFORMANCE_ITERS, backend, **kw)
+    s_stream, h_stream = driver.run(key, make_data_plane(cfg, "streaming"),
+                                    cfg, CONFORMANCE_ITERS, backend, **kw)
+    assert h_tiled == h_stream, f"{backend}: recorded objectives diverged"
+    np.testing.assert_array_equal(
+        np.asarray(s_tiled.w), np.asarray(s_stream.w),
+        err_msg=f"{backend}: final iterate diverged")
+
+
 def test_driver_accepts_plane_and_tuple_identically(problem):
     """as_data_plane coercion: a raw (X, y) pair and the DenseDataPlane
     wrapping it drive bitwise-identical runs."""

@@ -8,10 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data.plane import (DataPlane, DenseDataPlane, TiledDataPlane,
-                              as_data_plane, available_planes, make_plane)
+from repro.data.plane import (DataPlane, DenseDataPlane, StreamingDataPlane,
+                              StreamPrefetcher, TiledDataPlane, as_data_plane,
+                              available_planes, make_plane)
 from repro.data.synthetic import (SVM_UNIT_VARIANCE_SCALE, make_svm_data,
-                                  svm_tile_x)
+                                  stream_epoch_key, svm_stream_label_block,
+                                  svm_stream_tile_x, svm_tile_x)
 from repro.testing import small_fixture_config, sodda_test_mesh
 
 
@@ -19,9 +21,11 @@ from repro.testing import small_fixture_config, sodda_test_mesh
 # Registry / coercion
 # ---------------------------------------------------------------------------
 def test_registry_exposes_builtin_planes():
-    assert set(available_planes()) >= {"dense", "tiled"}
+    assert set(available_planes()) >= {"dense", "tiled", "streaming"}
     assert TiledDataPlane.plane_name == "tiled"
     assert DenseDataPlane.plane_name == "dense"
+    assert StreamingDataPlane.plane_name == "streaming"
+    assert StreamingDataPlane.is_streaming and not TiledDataPlane.is_streaming
 
 
 def test_make_plane_unknown_kind():
@@ -173,6 +177,153 @@ def test_dense_nbytes_metadata():
     plane = TiledDataPlane(jax.random.PRNGKey(1), 100, 50, 2, 2)
     assert plane.dense_nbytes == 4 * (100 * 50 + 100)
     assert (plane.n, plane.m) == (50, 25)
+
+
+def test_dense_nbytes_derives_from_dtype_itemsize():
+    """The footprint metadata follows the plane's dtype (satellite fix: the
+    old hard-coded ``4 *`` lied for anything but float32)."""
+    X = jnp.zeros((8, 4), dtype=jnp.float16)
+    y = jnp.zeros((8,), dtype=jnp.float16)
+    plane = DenseDataPlane(X, y)
+    assert plane.dense_nbytes == 2 * (8 * 4 + 8)
+    assert plane.tile_nbytes == 2 * 8 * 4
+
+
+# ---------------------------------------------------------------------------
+# Streaming plane: epoch cursor, epoch-0 anchor, residency budget, prefetch.
+# ---------------------------------------------------------------------------
+def test_streaming_epoch_zero_is_tiled_bitwise():
+    """The epoch key degenerates to the base key at e = 0, so the stream's
+    first window IS the static tiled plane — the conformance anchor."""
+    key = jax.random.PRNGKey(7)
+    tiled = TiledDataPlane(key, 24, 12, 3, 2)
+    stream = StreamingDataPlane(key, 24, 12, 3, 2)
+    assert stream.epoch == 0
+    for p in range(3):
+        np.testing.assert_array_equal(np.asarray(stream.y_block(p)),
+                                      np.asarray(tiled.y_block(p)))
+        for q in range(2):
+            np.testing.assert_array_equal(np.asarray(stream.x_tile(p, q)),
+                                          np.asarray(tiled.x_tile(p, q)))
+    Xs, ys = stream.materialize()
+    Xt, yt = tiled.materialize()
+    np.testing.assert_array_equal(np.asarray(Xs), np.asarray(Xt))
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(yt))
+
+
+def test_streaming_epochs_are_distinct_windows():
+    """fold_in(key, e) gives every epoch fresh draws; no two windows of a
+    short prefix coincide (the stream is a stream, not a repeat)."""
+    stream = StreamingDataPlane(jax.random.PRNGKey(3), 16, 8, 2, 2)
+    tiles = [np.asarray(stream.x_tile_at(e, 0, 0)) for e in range(4)]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(tiles[i], tiles[j])
+
+
+def test_streaming_at_epoch_views_share_cache():
+    key = jax.random.PRNGKey(5)
+    stream = StreamingDataPlane(key, 16, 8, 2, 2)
+    view = stream.at_epoch(2)
+    assert view is not stream and view.epoch == 2 and stream.epoch == 0
+    assert stream.at_epoch(0) is stream
+    # the view's cursor-relative accessors hit the shared epoch-keyed cache
+    np.testing.assert_array_equal(np.asarray(view.x_tile(1, 0)),
+                                  np.asarray(stream.x_tile_at(2, 1, 0)))
+    assert stream.cache_stats["hits"] >= 1
+    with pytest.raises(ValueError, match="stream epoch"):
+        stream.at_epoch(-1)
+
+
+def test_static_plane_has_no_epochs():
+    plane = TiledDataPlane(jax.random.PRNGKey(0), 8, 8, 2, 2)
+    assert plane.at_epoch(0) is plane
+    with pytest.raises(ValueError, match="no epoch"):
+        plane.at_epoch(1)
+    with pytest.raises(ValueError, match="no epoch"):
+        plane.materialize_for("reference", epoch=3)
+
+
+def test_streaming_budget_bounds_residency_and_regenerates_bitwise():
+    """Eviction under a tight budget costs a PRNG replay, never bits: a
+    re-generated tile equals its first materialization exactly, and the
+    resident count never exceeds the budget."""
+    key = jax.random.PRNGKey(9)
+    stream = StreamingDataPlane(key, 16, 8, 2, 2, resident_tile_budget=3)
+    first = {}
+    for e in range(3):
+        for p in range(2):
+            for q in range(2):
+                first[(e, p, q)] = np.asarray(stream.x_tile_at(e, p, q))
+                assert stream.cache_stats["resident"] <= 3
+    # every earlier tile was long evicted; regenerate and compare bitwise
+    for (e, p, q), tile in first.items():
+        np.testing.assert_array_equal(
+            np.asarray(stream.x_tile_at(e, p, q)), tile)
+    stats = stream.cache_stats
+    assert stats["misses"] > 12  # re-misses prove eviction actually happened
+
+
+def test_streaming_zero_budget_disables_caching():
+    stream = StreamingDataPlane(jax.random.PRNGKey(1), 8, 8, 2, 2,
+                                resident_tile_budget=0)
+    a = np.asarray(stream.x_tile(0, 0))
+    b = np.asarray(stream.x_tile(0, 0))
+    np.testing.assert_array_equal(a, b)
+    assert stream.cache_stats["resident"] == 0
+    assert stream.cache_stats["hits"] == 0
+
+
+def test_streaming_default_budget_is_two_windows():
+    stream = StreamingDataPlane(jax.random.PRNGKey(1), 16, 8, 2, 2)
+    assert stream.resident_tile_budget == 2 * (2 * 2 + 2)
+
+
+def test_stream_epoch_key_rejects_negative():
+    with pytest.raises(ValueError, match="must be >= 0"):
+        stream_epoch_key(jax.random.PRNGKey(0), -1)
+
+
+def test_stream_labels_share_base_key_separator():
+    """Every epoch's labels come from the SAME planted z (base key): the
+    stream is fresh observations of one ground truth. With no flips, a
+    label block equals the sign of the epoch-X rows against base-key z."""
+    key = jax.random.PRNGKey(13)
+    n, Q, m = 8, 2, 4
+    for e in (0, 2):
+        y = svm_stream_label_block(key, e, 0, n, Q, m, flip_prob=0.0)
+        from repro.data.synthetic import svm_feature_block_z
+        acc = jnp.zeros((n,))
+        for q in range(Q):
+            xq = svm_stream_tile_x(key, e, 0, q, n, m, standardize=False)
+            acc = acc + xq @ svm_feature_block_z(key, q, m)
+        np.testing.assert_array_equal(np.asarray(y),
+                                      np.asarray(jnp.where(acc >= 0, 1.0,
+                                                           -1.0)))
+
+
+def test_stream_prefetcher_issue_consume_bitwise():
+    """The double-buffered issue/consume path hands back exactly what the
+    synchronous placement would, counts cold misses only for unissued
+    epochs, and retires strictly-older windows."""
+    stream = StreamingDataPlane(jax.random.PRNGKey(2), 16, 8, 2, 2)
+    place = lambda e: stream.at_epoch(e).materialize()
+    with StreamPrefetcher(place) as pf:
+        pf.issue(0)
+        pf.issue(0)  # idempotent
+        X0, y0 = pf.consume(0)
+        Xr, yr = place(0)
+        np.testing.assert_array_equal(np.asarray(X0), np.asarray(Xr))
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(yr))
+        pf.issue(1)
+        X1, _ = pf.consume(1)
+        np.testing.assert_array_equal(np.asarray(X1),
+                                      np.asarray(place(1)[0]))
+        # epoch 3 was never issued: a cold miss, auto-issued on demand
+        pf.consume(3)
+        stats = pf.stats()
+        assert stats["cold_misses"] == 1 and stats["consumed"] == 3
+        assert 0.0 <= pf.overlap_ratio <= 1.0
 
 
 # ---------------------------------------------------------------------------

@@ -96,12 +96,23 @@ def test_every_registered_plane_is_documented():
     assert not errors, "\n".join(errors)
 
 
+def test_registry_planes_scan_includes_streaming():
+    """The streaming plane cannot dodge the docs gate."""
+    assert "streaming" in check_docs.registry_planes(os.path.abspath(ROOT))
+
+
 def test_plane_drift_check_flags_undocumented_plane(tmp_path):
     data = tmp_path / "src" / "repro" / "data"
     data.mkdir(parents=True)
     (data / "plane.py").write_text(
         '@register_plane("dense")\nclass A: ...\n'
         "@register_plane('sparse-ghost')\nclass B: ...\n")
+    # the scan is package-wide: a plane registered from a sibling module
+    # (the natural home for a specialized implementation) is caught too
+    (data / "exotic.py").write_text('@register_plane("exotic")\nclass C: ...\n')
+    assert check_docs.registry_planes(str(tmp_path)) == [
+        "dense", "exotic", "sparse-ghost"]
+    (data / "exotic.py").unlink()
     docs = tmp_path / "docs"
     docs.mkdir()
     (docs / "data.md").write_text("| `dense` | fine |\n")

@@ -128,6 +128,42 @@ def test_tiled_plane_tiles_bitwise_equal_dense_slices(seed, grid):
                 Xd[p * n:(p + 1) * n, q * m:(q + 1) * m])
 
 
+@given(st.integers(0, 2**31 - 1), plane_grids)
+def test_streaming_epoch_zero_bitwise_equals_tiled(seed, grid):
+    """For ANY grid, the streaming plane's window 0 is bitwise the static
+    tiled plane built from the same key — the epoch key degenerates to the
+    base key at e = 0, the anchor proving the time dimension changed no
+    math. (Fixed-grid fallback: tests/test_data_plane.py.)"""
+    from repro.data.plane import StreamingDataPlane, TiledDataPlane
+    P, Q, n, m = grid
+    key = jax.random.PRNGKey(seed)
+    tiled = TiledDataPlane(key, P * n, Q * m, P, Q)
+    stream = StreamingDataPlane(key, P * n, Q * m, P, Q)
+    for p in range(P):
+        np.testing.assert_array_equal(np.asarray(stream.y_block(p)),
+                                      np.asarray(tiled.y_block(p)))
+        for q in range(Q):
+            np.testing.assert_array_equal(np.asarray(stream.x_tile(p, q)),
+                                          np.asarray(tiled.x_tile(p, q)))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 8))
+def test_streaming_epoch_keys_are_disjoint(seed, e1, e2):
+    """Distinct epochs derive distinct keys (fold_in actually folds the
+    cursor), and regenerating the SAME epoch's tile bitwise-repeats — the
+    pair of properties behind regenerate-on-miss and cursor-restore."""
+    from repro.data.synthetic import stream_epoch_key, svm_stream_tile_x
+    key = jax.random.PRNGKey(seed)
+    a = svm_stream_tile_x(key, e1, 0, 0, 4, 3)
+    again = svm_stream_tile_x(key, e1, 0, 0, 4, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(again))
+    if e1 != e2:
+        assert not np.array_equal(np.asarray(stream_epoch_key(key, e1)),
+                                  np.asarray(stream_epoch_key(key, e2)))
+        assert not np.array_equal(
+            np.asarray(a), np.asarray(svm_stream_tile_x(key, e2, 0, 0, 4, 3)))
+
+
 @given(st.integers(0, 2**31 - 1), plane_grids, plane_grids)
 def test_tile_generation_is_grid_independent(seed, grid_a, grid_b):
     """The SAME (p, q) tile drawn from planes with two DIFFERENT grids is

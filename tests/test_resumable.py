@@ -241,3 +241,185 @@ def test_resume_refuses_different_data(cfg, plane, tmp_path):
     s, hist = driver.run_resumable(key, dense, cfg, 8, checkpoint_dir=d,
                                    segment_iters=4)
     assert int(s.t) == 9 and hist[-1][0] == 8
+
+
+# ---------------------------------------------------------------------------
+# Resume-guard hardening (satellite fix): stampless or partially-stamped
+# checkpoints are refused, never silently admitted.
+# ---------------------------------------------------------------------------
+def _rewrite_extra(ckpt_dir, fn):
+    """Apply `fn` to the latest committed step's extra stamp in place —
+    simulating a checkpoint written by an older driver (or a corrupted
+    one). The extra lives in the step's manifest.json."""
+    import json
+    import os
+    step_dir = os.path.join(ckpt_dir, f"step_{latest_step(ckpt_dir):010d}")
+    path = os.path.join(step_dir, "manifest.json")
+    with open(path) as f:
+        man = json.load(f)
+    man["extra"] = fn(man["extra"])
+    with open(path, "w") as f:
+        json.dump(man, f)
+
+
+def test_resume_refuses_stampless_checkpoint(cfg, plane, tmp_path):
+    """A checkpoint with NO resume-guard stamp (the pre-guard layout) must
+    be refused: absence of evidence is not compatibility."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(7)
+    driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4)
+    _rewrite_extra(d, lambda extra: {"history": extra["history"]})
+    with pytest.raises(ValueError, match="no resume-guard stamp"):
+        driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4)
+
+
+def test_resume_refuses_partially_stamped_checkpoint(cfg, plane, tmp_path):
+    """EVERY guard key is required — a stamp missing only `data` (say) must
+    not pass just because the keys that happen to be present match."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(7)
+    driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4)
+
+    def drop_data(extra):
+        extra = dict(extra)
+        del extra["data"]
+        return extra
+
+    _rewrite_extra(d, drop_data)
+    with pytest.raises(ValueError, match=r"no resume-guard stamp.*data"):
+        driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4)
+
+
+# ---------------------------------------------------------------------------
+# Streaming plane through the segment driver: kill-and-resume restores the
+# stream cursor bitwise; the cursor stamp is required and cross-checked.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stream_plane(cfg):
+    return make_data_plane(cfg, "streaming")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_streaming_kill_and_resume_is_bitwise(backend, cfg, stream_plane,
+                                              tmp_path, request):
+    """One epoch per segment: the resumed run must restore the stream
+    cursor from the stamp and regenerate window `done // segment_iters`
+    exactly, landing bitwise on the uninterrupted trajectory."""
+    kw = _kwargs(backend, cfg, request)
+    key = jax.random.PRNGKey(8)
+
+    def preempt(done):
+        if done == 2 * SEGMENT:
+            raise RuntimeError("injected preemption")
+
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected preemption"):
+        driver.run_resumable(key, stream_plane, cfg, ITERS, backend,
+                             checkpoint_dir=d, segment_iters=SEGMENT,
+                             record_every=RECORD, on_segment=preempt, **kw)
+    s_res, h_res = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                        backend, checkpoint_dir=d,
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD, **kw)
+    s_full, h_full = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                          backend,
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD, **kw)
+    assert h_res == h_full, f"{backend}: resumed stream history diverged"
+    np.testing.assert_array_equal(
+        np.asarray(s_res.w), np.asarray(s_full.w),
+        err_msg=f"{backend}: resumed stream final iterate diverged")
+
+
+def test_streaming_run_differs_from_static_after_epoch_zero(cfg, stream_plane,
+                                                            plane, tmp_path):
+    """The stream actually streams: past the first epoch the windows are
+    fresh draws, so the multi-segment trajectory diverges from the static
+    tiled plane's (which replays window 0 forever)."""
+    key = jax.random.PRNGKey(9)
+    s_stream, _ = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                       checkpoint_dir=str(tmp_path / "a"),
+                                       segment_iters=SEGMENT,
+                                       record_every=RECORD)
+    s_static, _ = driver.run_resumable(key, plane, cfg, ITERS,
+                                       checkpoint_dir=str(tmp_path / "b"),
+                                       segment_iters=SEGMENT,
+                                       record_every=RECORD)
+    assert not np.array_equal(np.asarray(s_stream.w), np.asarray(s_static.w))
+
+
+def test_resume_refuses_missing_stream_cursor(cfg, stream_plane, tmp_path):
+    """A streaming resume from a checkpoint with no stream_epoch stamp
+    cannot know which window the run was consuming — refused."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(10)
+    driver.run_resumable(key, stream_plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4)
+
+    def drop_cursor(extra):
+        extra = dict(extra)
+        del extra["stream_epoch"]
+        return extra
+
+    _rewrite_extra(d, drop_cursor)
+    with pytest.raises(ValueError, match="no stream_epoch cursor"):
+        driver.run_resumable(key, stream_plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4)
+
+
+def test_resume_refuses_tampered_stream_cursor(cfg, stream_plane, tmp_path):
+    """The stamp is cross-checked against the boundary's implied epoch —
+    a cursor that disagrees with `done // segment_iters` is refused."""
+    d = str(tmp_path / "c")
+    key = jax.random.PRNGKey(10)
+    driver.run_resumable(key, stream_plane, cfg, 4, checkpoint_dir=d,
+                         segment_iters=4)
+
+    def bump_cursor(extra):
+        extra = dict(extra)
+        extra["stream_epoch"] = extra["stream_epoch"] + 3
+        return extra
+
+    _rewrite_extra(d, bump_cursor)
+    with pytest.raises(ValueError, match="stream_epoch"):
+        driver.run_resumable(key, stream_plane, cfg, 8, checkpoint_dir=d,
+                             segment_iters=4)
+
+
+def test_resume_refuses_streaming_static_crossover(cfg, stream_plane, plane,
+                                                   tmp_path):
+    """A checkpoint written by a streaming run must not continue under a
+    static plane (or vice versa): epoch 0 aside, they are different data
+    sequences. Both directions are refused before the fingerprint check
+    can even conclude anything."""
+    key = jax.random.PRNGKey(11)
+    d1 = str(tmp_path / "stream")
+    driver.run_resumable(key, stream_plane, cfg, 4, checkpoint_dir=d1,
+                         segment_iters=4)
+    with pytest.raises(ValueError, match="streaming"):
+        driver.run_resumable(key, plane, cfg, 8, checkpoint_dir=d1,
+                             segment_iters=4)
+    d2 = str(tmp_path / "static")
+    driver.run_resumable(key, plane, cfg, 4, checkpoint_dir=d2,
+                         segment_iters=4)
+    with pytest.raises(ValueError, match="streaming"):
+        driver.run_resumable(key, stream_plane, cfg, 8, checkpoint_dir=d2,
+                             segment_iters=4)
+
+
+def test_streaming_run_reports_prefetch_stats(cfg, stream_plane, tmp_path):
+    """The optional stream_stats out-param surfaces the prefetcher and
+    tile-cache counters the bench cell records."""
+    stats = {}
+    driver.run_resumable(jax.random.PRNGKey(12), stream_plane, cfg, ITERS,
+                         checkpoint_dir=str(tmp_path / "c"),
+                         segment_iters=SEGMENT, record_every=RECORD,
+                         stream_stats=stats)
+    assert stats["consumed"] >= ITERS // SEGMENT
+    assert 0.0 <= stats["overlap_ratio"] <= 1.0
+    assert stats["cache"]["misses"] > 0

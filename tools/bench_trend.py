@@ -15,11 +15,13 @@ Pure stdlib (json only) — runnable in the dependency-free CI jobs.
 Exit codes (documented in docs/benchmarks.md):
 
     0  no backend regressed beyond the threshold (new/dropped backends are
-       reported but never fail — they appear and retire across PRs)
+       reported but never fail — they appear and retire across PRs);
+       also ``--help``/``--version``, which exit 0 like every CLI
     1  at least one backend's scan us/iter regressed beyond the threshold
     2  usage error (bad arguments, unreadable/invalid file)
-    3  incomparable artifacts: schema, problem, or iteration count differ —
-       a trend over different measurements is meaningless, so the gate
+    3  incomparable artifacts: schema, problem, or iteration count differ,
+       or either artifact has a missing/empty ``backends`` map — a trend
+       over different (or zero) measurements is meaningless, so the gate
        refuses rather than passes
 """
 from __future__ import annotations
@@ -83,8 +85,10 @@ def main(argv=None) -> int:
                          "(default 0.25 = 25%%)")
     try:
         args = ap.parse_args(argv)
-    except SystemExit:
-        return 2
+    except SystemExit as e:
+        # argparse exits 0 for --help/--version and 2 for usage errors;
+        # swallowing both as 2 would make `--help` report failure
+        return 0 if not e.code else 2
     if args.threshold < 0:
         print(f"threshold must be >= 0, got {args.threshold}")
         return 2
@@ -94,6 +98,14 @@ def main(argv=None) -> int:
         if reason:
             print(f"INCOMPARABLE: {reason}")
             return 3
+        for label, art in (("baseline", baseline), ("current", current)):
+            if not art.get("backends"):
+                # "OK ... 0 backends compared" is a vacuous pass, not a
+                # trend — an artifact with nothing to compare is refused
+                # for the same reason a schema mismatch is
+                print(f"INCOMPARABLE: {label} has no backends map "
+                      "(nothing to compare)")
+                return 3
         rows = diff(baseline, current, args.threshold)
     except (OSError, ValueError, KeyError, TypeError,
             ZeroDivisionError) as e:

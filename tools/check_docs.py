@@ -180,21 +180,29 @@ def check_registry_documented(root: str):
             for b in backends if f"`{b}`" not in text]
 
 
-_PLANE_SRC = os.path.join("src", "repro", "data", "plane.py")
+_PLANE_SRC_DIR = os.path.join("src", "repro", "data")
 _DATA_DOC = os.path.join("docs", "data.md")
 _REGISTER_PLANE_RE = re.compile(r"register_plane\(\s*['\"]([^'\"]+)['\"]")
 
 
 def registry_planes(root: str):
-    """DataPlane names registered in ``src/repro/data/plane.py``, by static
-    scan of the ``@register_plane("...")`` decorations — the dependency-free
-    stand-in for ``repro.data.plane.available_planes()`` (pinned against it
-    in ``tests/test_docs.py``)."""
-    path = os.path.join(root, _PLANE_SRC)
-    if not os.path.isfile(path):
+    """DataPlane names registered anywhere under ``src/repro/data/``, by
+    static scan of the ``@register_plane("...")`` decorations — the
+    dependency-free stand-in for ``repro.data.plane.available_planes()``
+    (pinned against it in ``tests/test_docs.py``). The whole package is
+    scanned, not just ``plane.py``, so a plane registered from a sibling
+    module (the natural home for a specialized implementation) cannot dodge
+    the gate."""
+    src_dir = os.path.join(root, _PLANE_SRC_DIR)
+    if not os.path.isdir(src_dir):
         return []
-    with open(path) as f:
-        return sorted(set(_REGISTER_PLANE_RE.findall(f.read())))
+    names = set()
+    for fname in sorted(os.listdir(src_dir)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(src_dir, fname)) as f:
+            names.update(_REGISTER_PLANE_RE.findall(f.read()))
+    return sorted(names)
 
 
 def check_planes_documented(root: str):
