@@ -352,7 +352,7 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
         try:
             with open(out_path) as f:
                 old = json.load(f)
-            for block in ("large_problem", "streaming"):
+            for block in ("large_problem", "streaming", "supervision"):
                 if old.get(block) is not None:
                     payload[block] = old[block]
         except (ValueError, OSError):
@@ -602,6 +602,101 @@ def bench_streaming(iters: int = STREAM_ITERS_DEFAULT,
 
 
 # ---------------------------------------------------------------------------
+# Supervision overhead cell: what does wrapping run_resumable in the
+# SegmentSupervisor cost on the fault-free path, and what do in-scan
+# io_callback commits add on top? Measured as us/iter ratios (supervised /
+# bare) at commit_every=0 (host-boundary commits only) and a small
+# commit_every (the preemptible-segment regime), merged into
+# BENCH_sodda.json as the ``supervision`` block.
+# ---------------------------------------------------------------------------
+SUP_ITERS_DEFAULT = 64
+SUP_SEGMENT_DEFAULT = 16
+SUP_COMMIT_SMALL_DEFAULT = 4
+
+
+def bench_supervision(iters: int = SUP_ITERS_DEFAULT,
+                      segment_iters: int = SUP_SEGMENT_DEFAULT,
+                      commit_small: int = SUP_COMMIT_SMALL_DEFAULT,
+                      reps: int = 3, out_path: str = None):
+    import tempfile
+
+    from repro.core import driver
+    from repro.distributed.fault_tolerance import SegmentSupervisor
+    from repro.testing import make_problem, small_fixture_config
+
+    cfg = small_fixture_config()
+    X, y = make_problem(cfg)
+    key = jax.random.PRNGKey(1)
+
+    # commit_every must be a multiple of record_every (every in-scan commit
+    # carries a complete history prefix), so both cells record at the
+    # commit cadence — identical recording cost, the commit writes are the
+    # only difference between them
+    record_every = commit_small
+
+    def bare(d, ce):
+        driver.run_resumable(key, (X, y), cfg, iters, "reference",
+                             checkpoint_dir=d, segment_iters=segment_iters,
+                             record_every=record_every, commit_every=ce)
+
+    def supervised(d, ce):
+        SegmentSupervisor().run_resumable(
+            key, (X, y), cfg, iters, "reference", checkpoint_dir=d,
+            segment_iters=segment_iters, record_every=record_every,
+            commit_every=ce)
+
+    def timed(run_fn, ce):
+        # every attempt gets a fresh dir: a reused one would trip the
+        # resume guard and time a no-op restore instead of the run. The
+        # warm-up attempt pays the segment-program compile (cached per
+        # commit grouping), so the timed reps measure the warm path.
+        with tempfile.TemporaryDirectory() as d:
+            run_fn(d, ce)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            with tempfile.TemporaryDirectory() as d:
+                run_fn(d, ce)
+        return (time.perf_counter() - t0) / reps / iters * 1e6
+
+    cells = {}
+    for label, ce in (("commit_every_0", 0),
+                      ("commit_every_small", commit_small)):
+        b_us, s_us = timed(bare, ce), timed(supervised, ce)
+        cells[label] = {"commit_every": ce, "bare_us_per_iter": b_us,
+                        "supervised_us_per_iter": s_us,
+                        "supervision_overhead_ratio": s_us / b_us}
+        row(f"driver_supervision_{label}", s_us,
+            f"bare_us={b_us:.1f} overhead={s_us / b_us:.2f}x")
+    block = {"problem": {"name": cfg.name, "P": cfg.P, "Q": cfg.Q,
+                         "N": cfg.N, "M": cfg.M, "L": cfg.L,
+                         "loss": cfg.loss},
+             "backend": "reference", "iters": iters,
+             "segment_iters": segment_iters, "record_every": record_every,
+             "reps": reps, "cells": cells,
+             # what the in-scan commits themselves cost, supervision held
+             # constant: supervised-at-small vs supervised-at-0
+             "in_scan_commit_overhead_ratio":
+                 cells["commit_every_small"]["supervised_us_per_iter"]
+                 / cells["commit_every_0"]["supervised_us_per_iter"]}
+    row("driver_supervision_in_scan_commits", 0.0,
+        f"commit_every={commit_small} "
+        f"overhead={block['in_scan_commit_overhead_ratio']:.2f}x")
+    out_path = out_path or BENCH_JSON
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+        payload["supervision"] = block
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        row("driver_supervision_json", 0.0, os.path.relpath(out_path))
+    else:
+        row("driver_supervision_json", 0.0,
+            f"WARN {os.path.relpath(out_path)} missing - run the driver "
+            "bench first to merge the supervision block")
+    return block
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary from the dry-run results (reads results/dryrun.json)
 # ---------------------------------------------------------------------------
 def bench_roofline_summary():
@@ -629,6 +724,7 @@ BENCHES = {
     "driver": bench_driver,
     "driver_large": bench_driver_large,
     "streaming": bench_streaming,
+    "supervision": bench_supervision,
     "distributed_sodda": bench_distributed_sodda,
     "roofline_summary": bench_roofline_summary,
 }

@@ -13,6 +13,9 @@ rely on the shape without re-deriving it from the writer.
     # ...and/or the streaming out-of-core cell:
     PYTHONPATH=src python -m benchmarks.validate_bench \
         results/BENCH_sodda.json --require-streaming
+    # ...and/or the supervision-overhead cell:
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        results/BENCH_sodda.json --require-supervision
 """
 from __future__ import annotations
 
@@ -113,6 +116,9 @@ def validate(payload: dict) -> dict:
     st = payload.get("streaming")
     if st is not None:
         _check_streaming(st)
+    sup = payload.get("supervision")
+    if sup is not None:
+        _check_supervision(sup)
     return payload
 
 
@@ -217,16 +223,82 @@ def _check_streaming(st):
               "out-of-core acceptance criterion")
 
 
+def _check_supervision(sup):
+    """The optional supervision-overhead cell (bench_supervision).
+
+    Two cells — ``commit_every_0`` (host-boundary commits only) and
+    ``commit_every_small`` (in-scan ``io_callback`` commits) — each
+    recording bare vs supervised ``run_resumable`` us/iter and their
+    ratio; ``in_scan_commit_overhead_ratio`` compares the supervised
+    runs across the two commit regimes. Ratios must be positive and
+    self-consistent with the us/iter values they summarize.
+    """
+    ctx = "supervision"
+    if not isinstance(sup, dict):
+        _fail(f"{ctx}: must be an object")
+    problem = sup.get("problem")
+    if not isinstance(problem, dict):
+        _fail(f"{ctx}.problem: missing object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"{ctx}.problem.{k} must be {ty.__name__}, "
+                  f"got {problem.get(k)!r}")
+    if not isinstance(sup.get("backend"), str):
+        _fail(f"{ctx}.backend must be a string, got {sup.get('backend')!r}")
+    for k in ("iters", "segment_iters", "record_every", "reps"):
+        v = sup.get(k)
+        if not isinstance(v, int) or v < 1:
+            _fail(f"{ctx}.{k} must be a positive int, got {v!r}")
+    cells = sup.get("cells")
+    if not isinstance(cells, dict) or \
+            set(cells) != {"commit_every_0", "commit_every_small"}:
+        _fail(f"{ctx}.cells must have exactly the commit_every_0/"
+              f"commit_every_small cells, got "
+              f"{sorted(cells) if isinstance(cells, dict) else cells!r}")
+    for name, c in cells.items():
+        cctx = f"{ctx}.cells[{name!r}]"
+        if not isinstance(c, dict):
+            _fail(f"{cctx}: must be an object")
+        ce = c.get("commit_every")
+        if not isinstance(ce, int) or ce < 0:
+            _fail(f"{cctx}.commit_every must be a non-negative int, "
+                  f"got {ce!r}")
+        if (name == "commit_every_0") != (ce == 0):
+            _fail(f"{cctx}.commit_every={ce!r} does not match the cell "
+                  "name")
+        for k in ("bare_us_per_iter", "supervised_us_per_iter",
+                  "supervision_overhead_ratio"):
+            v = c.get(k)
+            if not isinstance(v, (int, float)) or v <= 0:
+                _fail(f"{cctx}.{k} must be positive, got {v!r}")
+        implied = c["supervised_us_per_iter"] / c["bare_us_per_iter"]
+        if abs(c["supervision_overhead_ratio"] - implied) > 1e-6 * implied:
+            _fail(f"{cctx}.supervision_overhead_ratio "
+                  f"({c['supervision_overhead_ratio']}) is not "
+                  f"supervised/bare ({implied})")
+    r = sup.get("in_scan_commit_overhead_ratio")
+    if not isinstance(r, (int, float)) or r <= 0:
+        _fail(f"{ctx}.in_scan_commit_overhead_ratio must be positive, "
+              f"got {r!r}")
+    implied = cells["commit_every_small"]["supervised_us_per_iter"] \
+        / cells["commit_every_0"]["supervised_us_per_iter"]
+    if abs(r - implied) > 1e-6 * implied:
+        _fail(f"{ctx}.in_scan_commit_overhead_ratio ({r}) is not "
+              f"supervised-small/supervised-0 ({implied})")
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     paths, required = [], []
-    require_streaming = False
+    require_streaming = require_supervision = False
     it = iter(argv)
     for a in it:
         if a == "--require-backend":
             required.append(next(it, None))
         elif a == "--require-streaming":
             require_streaming = True
+        elif a == "--require-supervision":
+            require_supervision = True
         else:
             paths.append(a)
     if len(paths) != 1 or None in required:
@@ -242,6 +314,10 @@ def main(argv=None) -> int:
     if require_streaming and payload.get("streaming") is None:
         print(f"FAIL {paths[0]}: required streaming cell missing "
               "(run benchmarks.run --only streaming to produce it)")
+        return 1
+    if require_supervision and payload.get("supervision") is None:
+        print(f"FAIL {paths[0]}: required supervision cell missing "
+              "(run benchmarks.run --only supervision to produce it)")
         return 1
     n = len(payload["backends"])
     ref = payload["backends"].get("reference", {})

@@ -1,6 +1,8 @@
-from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+from repro.checkpoint.checkpoint import (CheckpointError, CheckpointManager,
+                                         committed_steps, latest_step,
                                          read_extra, restore_checkpoint,
                                          save_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "read_extra",
-           "latest_step", "CheckpointManager"]
+           "latest_step", "committed_steps", "CheckpointError",
+           "CheckpointManager"]

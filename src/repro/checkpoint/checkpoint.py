@@ -30,13 +30,48 @@ import numpy as np
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint that exists but cannot be read: corrupt or truncated
+    manifest JSON (a writer crashed mid-write on a filesystem without atomic
+    rename, or the file was damaged after commit). Carries the offending
+    path in the message so the operator knows which entry to delete.
+
+    RuntimeError (not ValueError) on purpose: supervisors treat ValueError
+    as misconfiguration and never retry it, while a damaged checkpoint is an
+    environment fault — the caller may legitimately fall back to an older
+    committed step or re-seed the directory.
+    """
+
+
+def _load_manifest(path: str) -> dict:
+    """Parse ``<path>/manifest.json``, wrapping parse failures in
+    :class:`CheckpointError` naming the offending file — a truncated or
+    corrupt manifest must read as 'this checkpoint is damaged', never as a
+    raw ``json`` traceback with no path."""
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(
+            f"corrupt or truncated checkpoint manifest {manifest_path!r}: "
+            f"{e}") from e
+    if not isinstance(manifest, dict) or "step" not in manifest:
+        raise CheckpointError(
+            f"malformed checkpoint manifest {manifest_path!r}: expected an "
+            "object with a 'step' field")
+    return manifest
+
+
 def _step_entries(directory: str) -> List[Tuple[int, str]]:
     """``(step, dirname)`` for every well-formed ``step_<N>`` entry, sorted
-    by step. Malformed names are skipped, not errors."""
+    by step. Malformed names are skipped, not errors — and so are plain
+    *files* with a step-shaped name (a crashed writer's partial artifact is
+    whatever it is, never a checkpoint and never a GC target)."""
     out = []
     for name in os.listdir(directory):
         m = _STEP_RE.match(name)
-        if m:
+        if m and os.path.isdir(os.path.join(directory, name)):
             out.append((int(m.group(1)), name))
     return sorted(out)
 
@@ -103,6 +138,16 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def committed_steps(directory: str) -> List[int]:
+    """Every committed checkpoint step in `directory`, ascending. The
+    speculative-replay path uses this to find the boundary *before* the
+    latest one (the carry a flagged segment started from)."""
+    if not os.path.isdir(directory):
+        return []
+    return [s for s, name in _step_entries(directory)
+            if _committed(directory, name)]
+
+
 def read_extra(directory: str, step: Optional[int] = None) -> Tuple[int, dict]:
     """(step, extra) of a committed checkpoint, without loading any arrays.
 
@@ -116,8 +161,7 @@ def read_extra(directory: str, step: Optional[int] = None) -> Tuple[int, dict]:
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     path = _committed_path(directory, step)
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(path)
     return manifest["step"], manifest.get("extra", {})
 
 
@@ -129,8 +173,7 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     path = _committed_path(directory, step)
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(path)
 
     flat_keys = list(_flatten(template).keys())
     loaded = {}
@@ -178,6 +221,12 @@ class CheckpointManager:
             save_checkpoint(self.directory, step, tree, extra, self.keep)
             return True
         return False
+
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
+        """Unconditional save through this manager's directory/keep policy —
+        the in-scan (``commit_every``) commit path, whose cadence is decided
+        by the compiled program rather than by ``every``."""
+        return save_checkpoint(self.directory, step, tree, extra, self.keep)
 
     def restore_or_init(self, template, init_fn, extra_default: Optional[dict] = None):
         step = latest_step(self.directory)

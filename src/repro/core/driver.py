@@ -97,7 +97,8 @@ from repro.configs.sodda_svm import SoddaConfig
 from repro.core import losses
 
 __all__ = ["record_ticks", "make_run", "place_initial_state", "run",
-           "run_resumable", "migrate_resumable", "run_python_loop"]
+           "run_resumable", "migrate_resumable", "replay_segment",
+           "restore_resumable_state", "run_python_loop"]
 
 
 def record_ticks(iters: int, record_every: int) -> Tuple[int, ...]:
@@ -304,10 +305,55 @@ def run_python_loop(key, data, cfg: SoddaConfig, iters: int,
 # ---------------------------------------------------------------------------
 # Resumable runs: segment the trajectory at checkpoint boundaries.
 # ---------------------------------------------------------------------------
+# The active in-scan commit sink (one slot: resumable dispatches are
+# host-serial). The compiled segment program calls the module-level
+# _dispatch_in_scan_commit below — never a per-run closure, which would
+# defeat the lru_cache — and the driver installs/clears the actual sink
+# around each dispatch. io_callback runs the sink on a runtime thread, so
+# neither a thread-local nor a contextvar would reach it.
+#
+# Sink exceptions must NOT escape the callback: an error propagating out
+# of an *unordered* io_callback (the only kind mesh programs may use)
+# leaves the dispatch permanently un-done and `block_until_ready` hangs
+# forever. The dispatcher traps the first exception in _COMMIT_ERROR,
+# suppresses every later commit of the dispatch (a killed worker commits
+# nothing further), and the driver re-raises it host-side after the sync.
+_ACTIVE_COMMIT = [None]
+_COMMIT_ERROR = [None]
+
+
+def _dispatch_in_scan_commit(base, step, fbuf, carry):
+    sink = _ACTIVE_COMMIT[0]
+    if sink is not None and _COMMIT_ERROR[0] is None:
+        try:
+            sink(int(base), int(step), np.asarray(fbuf), carry)
+        except BaseException as exc:  # noqa: BLE001 - re-raised by the driver
+            _COMMIT_ERROR[0] = exc
+
+
+def _commit_groups(seg_iters: int, record_every: int, commit_every: int):
+    """The segment's chunk lengths grouped so each *full* group ends on an
+    in-scan commit point (a multiple of ``commit_every`` iterations past the
+    segment entry); a shorter tail group ends the segment without one — its
+    boundary belongs to the host-side save path. Returns
+    ``((chunk_lens, commits), ...)``."""
+    groups, cur, acc = [], [], 0
+    for length in _chunk_lengths(seg_iters, record_every):
+        cur.append(length)
+        acc += length
+        if acc % commit_every == 0:
+            groups.append((tuple(cur), True))
+            cur = []
+    if cur:
+        groups.append((tuple(cur), False))
+    return tuple(groups)
+
+
 @functools.lru_cache(maxsize=64)
 def _cached_segment_run(cfg: SoddaConfig, seg_iters: int, backend: str,
                         record_every: int, mesh,
-                        options: Tuple[Tuple[str, object], ...]):
+                        options: Tuple[Tuple[str, object], ...],
+                        commit_every: int = 0):
     """Compiled carry-level segment ``(carry, X, y) -> (carry, fs)``.
 
     Unlike :func:`_cached_run` this neither builds nor strips the carry
@@ -319,6 +365,19 @@ def _cached_segment_run(cfg: SoddaConfig, seg_iters: int, backend: str,
     uninterrupted run's ticks, with the final objective appended once by
     :func:`run_resumable`.
 
+    With ``commit_every > 0`` the signature grows a trailing ``base``
+    argument (the global iteration count at segment entry) and the program
+    interleaves :func:`jax.experimental.io_callback` commit points between
+    chunk groups: after every ``commit_every`` iterations the carry, the
+    objectives recorded so far and the global step are handed to the host
+    sink (:data:`_ACTIVE_COMMIT`), which writes a crash-atomic checkpoint
+    *while the dispatch is still running*. The callbacks return nothing and
+    touch no values, so the commit-enabled program computes the bitwise-same
+    trajectory as the plain one. Ordered callbacks are used on single-device
+    programs; mesh programs use unordered ones (XLA rejects ordered effects
+    in multi-device computations) — safe because each commit is an
+    independent atomic step directory and resume takes the max committed.
+
     Deliberately NOT donated, unlike :func:`_cached_run`: the segment carry
     is rebound in a host-side chain (``carry, fs = compiled(carry, ...)``),
     and on this jax/CPU combination a donated input whose last reference
@@ -329,22 +388,47 @@ def _cached_segment_run(cfg: SoddaConfig, seg_iters: int, backend: str,
     a few KB per *segment*, noise next to the checkpoint write it
     accompanies.
     """
+    from jax.experimental import io_callback
+
     from repro.core import engine
 
     bundle = engine.make_bundle(cfg, backend, mesh=mesh, **dict(options))
     obj = functools.partial(losses.objective, cfg.loss)
-    lens = jnp.asarray(_chunk_lengths(seg_iters, record_every), jnp.int32)
 
-    def _run(carry, X, y):
-        def chunk(c, length):
-            f = obj(X, y, c.w)
-            c = jax.lax.fori_loop(0, length,
-                                  lambda _, cc: bundle.step(cc, X, y), c)
-            return c, f
+    def chunk(c, length, X, y):
+        f = obj(X, y, c.w)
+        c = jax.lax.fori_loop(0, length,
+                              lambda _, cc: bundle.step(cc, X, y), c)
+        return c, f
 
-        return jax.lax.scan(chunk, carry, lens)
+    if not commit_every:
+        lens = jnp.asarray(_chunk_lengths(seg_iters, record_every), jnp.int32)
 
-    return jax.jit(_run)
+        def _run(carry, X, y):
+            return jax.lax.scan(
+                lambda c, length: chunk(c, length, X, y), carry, lens)
+
+        return jax.jit(_run)
+
+    groups = _commit_groups(seg_iters, record_every, commit_every)
+    ordered = mesh is None
+
+    def _run_commit(carry, X, y, base):
+        fs_parts, off = [], 0
+        for group_lens, commits in groups:
+            lens = jnp.asarray(group_lens, jnp.int32)
+            carry, fs = jax.lax.scan(
+                lambda c, length: chunk(c, length, X, y), carry, lens)
+            fs_parts.append(fs)
+            off += sum(group_lens)
+            if commits:
+                io_callback(_dispatch_in_scan_commit, None, base,
+                            base + jnp.int32(off),
+                            jnp.concatenate(fs_parts), carry,
+                            ordered=ordered)
+        return carry, jnp.concatenate(fs_parts)
+
+    return jax.jit(_run_commit)
 
 
 @functools.lru_cache(maxsize=64)
@@ -390,7 +474,8 @@ def _data_fingerprint(plane) -> str:
     return h.hexdigest()
 
 
-def _validate_segmenting(iters: int, segment_iters: int, record_every: int):
+def _validate_segmenting(iters: int, segment_iters: int, record_every: int,
+                         commit_every: int = 0):
     record_ticks(iters, record_every)  # validate iters/record_every
     if segment_iters < 1:
         raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
@@ -399,12 +484,26 @@ def _validate_segmenting(iters: int, segment_iters: int, record_every: int):
             f"segment_iters ({segment_iters}) must be a multiple of "
             f"record_every ({record_every}) so segment boundaries land on "
             "recording ticks")
+    if commit_every < 0:
+        raise ValueError(f"commit_every must be >= 0, got {commit_every}")
+    if commit_every:
+        if commit_every % record_every:
+            raise ValueError(
+                f"commit_every ({commit_every}) must be a multiple of "
+                f"record_every ({record_every}) so every in-scan commit "
+                "carries a complete history prefix")
+        if segment_iters % commit_every:
+            raise ValueError(
+                f"segment_iters ({segment_iters}) must be a multiple of "
+                f"commit_every ({commit_every}) so commit points tile the "
+                "segment and every resume lands on a commit-cadence step")
 
 
 def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                   backend: str = "reference", *, checkpoint_dir: str,
                   segment_iters: int, record_every: int = 1, mesh=None,
-                  keep: int = 3, on_segment=None, on_segment_start=None,
+                  keep: int = 3, commit_every: int = 0, on_commit=None,
+                  on_segment=None, on_segment_start=None,
                   stream_stats=None, **options):
     """:func:`run` split into checkpointed segments (ROADMAP "Driver-level
     checkpointing", the host-side version: chunk boundary = preemption
@@ -442,13 +541,32 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
     ``stream_stats`` to receive the prefetcher's overlap accounting
     (``overlap_ratio``, ``place_s``, ``wait_s``, ...) and the plane's tile
     cache counters after the run; ignored for static planes.
+
+    ``commit_every > 0`` makes the *segment itself* preemptible: the
+    compiled program additionally commits the carry every ``commit_every``
+    iterations from inside the scan, through an
+    :func:`jax.experimental.io_callback` whose host sink reuses the same
+    crash-atomic ``CheckpointManager`` write path (tmp + rename + commit
+    marker) and stamps the same resume guard, with the history prefix
+    reconstructed from the on-device objective buffer. A kill mid-dispatch
+    then loses at most ``commit_every`` iterations instead of the whole
+    segment, and a rerun resumes — bitwise — from the newest in-scan commit
+    (``done`` mid-segment: the first dispatch just finishes that segment).
+    ``commit_every`` must be a multiple of ``record_every`` and divide
+    ``segment_iters``. ``on_commit(iters_done)`` fires after each in-scan
+    commit lands — the mid-segment fault-injection seam; it runs inside the
+    dispatch, where an escaping exception would hang an unordered
+    io_callback's dispatch forever, so the dispatcher traps it, suppresses
+    the dispatch's remaining commits (a killed worker commits nothing
+    further) and re-raises it here once the dispatch drains — the original
+    exception, unwrapped, after ``commit_every``-granular progress landed.
     """
     from repro.checkpoint import CheckpointManager, latest_step, \
         read_extra, restore_checkpoint
     from repro.core.sodda import init_state
     from repro.data.plane import StreamPrefetcher
 
-    _validate_segmenting(iters, segment_iters, record_every)
+    _validate_segmenting(iters, segment_iters, record_every, commit_every)
 
     opt_key = tuple(sorted(options.items()))
     plane, bundle = _checked_bundle(data, cfg, backend, mesh, opt_key)
@@ -460,8 +578,8 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
         prefetch = StreamPrefetcher(
             lambda e: bundle.place_data(plane, epoch=e))
 
-    def stamp(done_now):
-        extra = {"history": [[t, f] for t, f in hist],
+    def stamp(done_now, hist_now):
+        extra = {"history": [[t, f] for t, f in hist_now],
                  "backend": backend,
                  "record_every": record_every,
                  "segment_iters": segment_iters,
@@ -471,8 +589,22 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                  "key": _key_stamp(key)}
         if plane.is_streaming:
             # the cursor of the next segment to run from this boundary
+            # (mid-segment: still inside its own window's epoch)
             extra["stream_epoch"] = done_now // segment_iters
         return extra
+
+    def _in_scan_sink(base, step, fbuf, carry_np):
+        """Host half of the io_callback commit: write the step-atomic
+        checkpoint with the history prefix the dispatch has produced so
+        far. Runs on the runtime callback thread while the host thread
+        blocks on this dispatch's results, so `hist` is stable."""
+        if step % segment_iters == 0:
+            return  # boundary: the host-side save below owns it
+        commit_hist = hist + [(base + k * record_every, float(f))
+                              for k, f in enumerate(fbuf)]
+        manager.save(step, carry_np, extra=stamp(step, commit_hist))
+        if on_commit is not None:
+            on_commit(step)
 
     try:
         # epoch 0 is both segment 0's window and the warm-up/template
@@ -549,6 +681,12 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                         f"boundary at iteration {latest} implies epoch "
                         f"{latest // segment_iters} — the stamp was "
                         "tampered with or written by a different cadence")
+            if latest % record_every:
+                raise ValueError(
+                    f"checkpoint at iteration {latest} in {checkpoint_dir!r} "
+                    f"is not on the record_every={record_every} cadence — "
+                    "not a boundary or in-scan commit this run could have "
+                    "written; refusing to resume")
             done, restored, extra = restore_checkpoint(checkpoint_dir, carry)
             carry = jax.tree.map(
                 lambda leaf, proto: jax.device_put(leaf, proto.sharding),
@@ -558,7 +696,10 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
         while done < iters:
             if on_segment_start is not None:
                 on_segment_start(done)
-            seg = min(segment_iters, iters - done)
+            # a mid-segment resume (done off the boundary cadence — an
+            # in-scan commit) first runs the remainder of its segment, so
+            # the save cadence realigns at the next boundary
+            seg = min(segment_iters - done % segment_iters, iters - done)
             if prefetch is not None:
                 # consume this segment's window (already resident unless
                 # this is the first segment after a cold start/resume),
@@ -568,13 +709,29 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                 if done + seg < iters:
                     prefetch.issue(done // segment_iters + 1)
             compiled = _cached_segment_run(cfg, seg, backend, record_every,
-                                           mesh, opt_key)
-            carry, fs = compiled(carry, X, y)
+                                           mesh, opt_key, commit_every)
+            if commit_every:
+                _ACTIVE_COMMIT[0] = _in_scan_sink
+                _COMMIT_ERROR[0] = None
+                try:
+                    carry, fs = compiled(carry, X, y, jnp.int32(done))
+                    # finish all commits while the sink is installed and
+                    # before hist advances
+                    jax.block_until_ready((carry, fs))
+                finally:
+                    _ACTIVE_COMMIT[0] = None
+                if _COMMIT_ERROR[0] is not None:
+                    # surface the trapped in-dispatch fault; commits after
+                    # it were suppressed, so resume restarts from it
+                    exc, _COMMIT_ERROR[0] = _COMMIT_ERROR[0], None
+                    raise exc
+            else:
+                carry, fs = compiled(carry, X, y)
             hist += [(done + t, float(f))
                      for t, f in zip(range(0, seg, record_every),
                                      np.asarray(fs))]
             done += seg
-            manager.maybe_save(done, carry, extra=stamp(done))
+            manager.maybe_save(done, carry, extra=stamp(done, hist))
             if on_segment is not None:
                 on_segment(done)
 
@@ -642,3 +799,104 @@ def migrate_resumable(key, data, cfg: SoddaConfig, done: int, state,
         extra["stream_epoch"] = done // segment_iters
     save_checkpoint(checkpoint_dir, done, carry, extra=extra, keep=keep)
     return carry
+
+
+def restore_resumable_state(key, data, cfg: SoddaConfig,
+                            backend: str = "reference", *,
+                            checkpoint_dir: str, mesh=None, step=None,
+                            **options):
+    """``(done, SoddaState, history)`` of a committed checkpoint written by
+    :func:`run_resumable` (the latest one unless ``step`` picks another).
+
+    Builds the restore template through the same warm-up machinery as the
+    driver — so extended carries (the async exchange buffer) restore with
+    the right structure — and finalizes the carry down to the P-independent
+    ``SoddaState``. This is the handle the elastic layer uses to lift a
+    committed iterate off a run it aborted (e.g. the straggler-triggered
+    rescale in ``repro.distributed.fault_tolerance.run_elastic_auto``):
+    the state feeds :func:`migrate_resumable` on the new grid.
+    """
+    from repro.checkpoint import restore_checkpoint
+    from repro.core.sodda import init_state
+
+    opt_key = tuple(sorted(options.items()))
+    plane, bundle = _checked_bundle(data, cfg, backend, mesh, opt_key)
+    # any window yields the template (shapes/shardings, never values)
+    X, y = bundle.place_data(plane)
+    state0 = place_initial_state(
+        init_state(jnp.array(key, copy=True), cfg.M), cfg, backend, mesh)
+    template = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
+    done, restored, extra = restore_checkpoint(checkpoint_dir, template,
+                                               step=step)
+    carry = jax.tree.map(
+        lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+        restored, template)
+    hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
+    return done, bundle.finalize(carry), hist
+
+
+def replay_segment(key, data, cfg: SoddaConfig, backend: str = "reference",
+                   *, checkpoint_dir: str, segment_iters: int,
+                   record_every: int = 1, mesh=None, step=None, **options):
+    """Speculatively re-execute the span between two committed checkpoints
+    and cross-check the result against the committed carry — the
+    verification half of a straggler response.
+
+    A flagged-slow worker's output is exactly the output you should trust
+    least; because every span is a pure function of its entry carry and its
+    data window, a backup execution can replay it and compare **bitwise**.
+    ``step`` selects the replay target (default: the latest committed step);
+    the replay restores the committed step *before* it and re-dispatches the
+    span through the same compiled segment program.
+
+    Read-only: touches no checkpoint, advances nothing. Returns a report
+    dict — ``replayed`` False (with a ``reason``) when there is no
+    predecessor to replay from or the span is not replayable (crosses a
+    stream window, off the record cadence), else ``start``/``end`` and
+    ``match`` (True iff every carry leaf reproduced bitwise).
+    """
+    from repro.checkpoint import committed_steps, restore_checkpoint
+    from repro.core.sodda import init_state
+
+    _validate_segmenting(segment_iters, segment_iters, record_every)
+    opt_key = tuple(sorted(options.items()))
+    plane, bundle = _checked_bundle(data, cfg, backend, mesh, opt_key)
+    steps = committed_steps(checkpoint_dir)
+    end = step if step is not None else (steps[-1] if steps else None)
+    report = {"replayed": False, "start": None, "end": end, "match": None}
+    if end is None or end not in steps:
+        report["reason"] = "no committed checkpoint to replay to"
+        return report
+    prior = [s for s in steps if s < end]
+    if not prior:
+        report["reason"] = "no committed predecessor to replay from"
+        return report
+    start = prior[-1]
+    report["start"] = start
+    if (end - start) % record_every:
+        report["reason"] = "span is off the record_every cadence"
+        return report
+    if plane.is_streaming and start // segment_iters != \
+            (end - 1) // segment_iters:
+        report["reason"] = "span crosses a stream window boundary"
+        return report
+
+    epoch = start // segment_iters if plane.is_streaming else None
+    X, y = (bundle.place_data(plane) if epoch is None
+            else bundle.place_data(plane, epoch=epoch))
+    state0 = place_initial_state(
+        init_state(jnp.array(key, copy=True), cfg.M), cfg, backend, mesh)
+    template = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
+    _, restored, _ = restore_checkpoint(checkpoint_dir, template, step=start)
+    carry = jax.tree.map(
+        lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+        restored, template)
+    compiled = _cached_segment_run(cfg, end - start, backend, record_every,
+                                   mesh, opt_key)
+    carry, _ = compiled(carry, X, y)
+    _, committed, _ = restore_checkpoint(checkpoint_dir, template, step=end)
+    match = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(committed)))
+    report.update(replayed=True, match=bool(match))
+    return report

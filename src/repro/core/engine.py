@@ -379,23 +379,25 @@ def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
 
 
 def rescale_bundle(cfg: SoddaConfig, backend: str, new_P: int, **options):
-    """Rebuild the engine bundle for a shrunk observation grid — the
+    """Rebuild the engine bundle for a rescaled observation grid — the
     elastic-rescale seam of ``repro.distributed.fault_tolerance``.
 
     Returns ``(new_cfg, new_mesh, bundle)``: ``new_cfg`` is `cfg` with
-    ``P=new_P`` and the same per-partition ``n`` (a lost partition's
-    observations leave the problem; SODDA's Theorems 1-4 hold for any P, so
-    the shrunk run is the same algorithm on the surviving data — ``m_tilde``
-    regrows to ``M // (Q * new_P)`` and ``pi_q`` is redrawn next iteration).
+    ``P=new_P`` and the same per-partition ``n``. SODDA's Theorems 1-4 hold
+    for any P, so both directions are the same algorithm on a different
+    observation set: a *shrink* drops the lost partitions' rows from the
+    problem, a *grow* (``new_P > cfg.P`` — capacity returned) adds the new
+    partitions' rows (regenerated bitwise by the data plane's fold_in tile
+    keys, or re-ingested in production). ``m_tilde`` re-splits to
+    ``M // (Q * new_P)`` and ``pi_q`` is redrawn next iteration either way.
     Mesh backends get a fresh ``(new_P, Q)`` mesh — the old mesh contains
-    the dead worker's devices; single-host backends get ``mesh=None``.
-    `options` are the run's engine options, revalidated against the rebuilt
-    backend.
+    the dead worker's devices (shrink) or lacks the returned ones (grow);
+    single-host backends get ``mesh=None``. `options` are the run's engine
+    options, revalidated against the rebuilt backend.
     """
-    if not 1 <= new_P <= cfg.P:
+    if new_P < 1:
         raise ValueError(
-            f"rescale_bundle only shrinks the grid: new_P must be in "
-            f"[1, {cfg.P}], got {new_P}")
+            f"rescale_bundle needs new_P >= 1, got {new_P}")
     if cfg.M % (cfg.Q * new_P):
         raise ValueError(
             f"cannot rescale to P={new_P}: M={cfg.M} must split into "

@@ -167,6 +167,22 @@ class DataPlane(abc.ABC):
         """The footprint of one (n, m) feature tile."""
         return jnp.dtype(self.dtype).itemsize * self.n * self.m
 
+    @property
+    def generation_key(self):
+        """The base PRNG key this plane's tiles regenerate from, or None
+        for planes wrapping concrete arrays (``dense``). The elastic grow
+        path (``repro.distributed.fault_tolerance.regrow_plane``) reads
+        this to extend the grid with tiles bitwise-equal to a fresh plane's
+        — possible exactly because tile keys fold in only ``(p, q)``, never
+        the grid shape."""
+        return getattr(self, "_key", None)
+
+    @property
+    def flip_prob(self):
+        """The label-noise probability of key-derived planes (None for
+        planes wrapping concrete arrays) — regeneration must replay it."""
+        return getattr(self, "_flip_prob", None)
+
     @abc.abstractmethod
     def x_tile(self, p: int, q: int):
         """The (n, m) feature tile of worker (p, q)."""
@@ -508,6 +524,7 @@ class StreamPrefetcher:
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="stream-prefetch")
         self._pending: Dict[int, object] = {}  # epoch -> Future
+        self._closed = False
         self._lock = threading.Lock()
         self.place_s = 0.0   # worker wall-time spent generating + placing
         self.wait_s = 0.0    # consumer wall-time blocked on a window
@@ -557,8 +574,16 @@ class StreamPrefetcher:
                 "consumed": self.consumed, "cold_misses": self.cold_misses,
                 "overlap_ratio": self.overlap_ratio}
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` has joined the worker thread — what the
+        fault-injection suite asserts to prove a supervised retry leaked no
+        prefetch thread."""
+        return self._closed
+
     def close(self):
         self._pool.shutdown(wait=True)
+        self._closed = True
 
     def __enter__(self):
         return self

@@ -1,10 +1,14 @@
 from repro.distributed.fault_tolerance import (
+    GrownDataPlane,
     SegmentSupervisor,
     StragglerPolicy,
+    StragglerRescale,
     SurvivorDataPlane,
     TrainSupervisor,
+    regrow_plane,
     rescale_plan,
     run_elastic,
+    run_elastic_auto,
     shrink_plane,
 )
 from repro.distributed.sharding_rules import (
@@ -20,10 +24,14 @@ __all__ = [
     "decode_mode",
     "activation_pspec_fn",
     "StragglerPolicy",
+    "StragglerRescale",
     "TrainSupervisor",
     "SegmentSupervisor",
     "SurvivorDataPlane",
+    "GrownDataPlane",
     "rescale_plan",
     "shrink_plane",
+    "regrow_plane",
     "run_elastic",
+    "run_elastic_auto",
 ]

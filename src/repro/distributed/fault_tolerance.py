@@ -22,14 +22,25 @@ Three layers, bottom up:
   *consecutive* failures (committed progress resets it), and per-segment
   wall times feed the straggler policy. The supervisor *is* the segment
   scheduler: it decides what dispatches next, so straggler events land
-  exactly where the scheduling decision is made.
-* :func:`run_elastic` — shrink-P elasticity: phase 1 runs to a simulated
-  partition-loss boundary, :func:`rescale_plan` plans the shrink, the
-  engine bundle is rebuilt with the smaller grid
-  (:func:`repro.core.engine.rescale_bundle`), the carry migrates through a
-  seeded checkpoint (:func:`repro.core.driver.migrate_resumable`) and
-  phase 2 resumes on the surviving data — held to the same-optimum
-  ``STALENESS`` tolerance policy of ``repro.testing.tolerances``.
+  exactly where the scheduling decision is made — including the straggler
+  *response*: a consecutive-flag streak of ``straggler_patience`` triggers
+  ``straggler_action`` ("rescale" raises :class:`StragglerRescale` for the
+  elastic layer to shrink past the flagged worker; "speculate" re-executes
+  the flagged span via :func:`repro.core.driver.replay_segment` and
+  cross-checks it bitwise).
+* :func:`run_elastic` / :func:`run_elastic_auto` — elasticity in both
+  directions: a *shrink* drops a lost partition at a committed boundary
+  (:func:`rescale_plan` plans it, :func:`repro.core.engine.rescale_bundle`
+  rebuilds the grid, the carry migrates through
+  :func:`repro.core.driver.migrate_resumable`); a *grow* re-adds capacity
+  (``regrow_at``/``regrow_P``) by extending the plane with
+  :func:`regrow_plane` — fold_in tile keys regenerate the regrown
+  partitions bitwise-equal to a fresh plane of the larger grid — so one
+  supervised run composes shrink→grow round-trips. ``run_elastic_auto``
+  is the closed loop: the shrink boundary is chosen by the supervisor's
+  straggler response rather than preplanned. Topology-changing runs are
+  held to the same-optimum ``STALENESS`` tolerance policy of
+  ``repro.testing.tolerances``.
 
 See ``docs/fault_tolerance.md`` for the full contract.
 """
@@ -43,6 +54,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.checkpoint import CheckpointManager, latest_step
+from repro.data import synthetic
 from repro.data.plane import DataPlane, as_data_plane
 
 
@@ -93,28 +105,58 @@ class StragglerPolicy:
 
 
 def rescale_plan(old_P: int, new_P: int, n_per_partition: int):
-    """Elastic rescale plan for the SODDA observation grid: which old
-    partitions each surviving worker absorbs. Deterministic,
-    communication-minimal (only the ``old_P - new_P`` lost partitions move,
-    round-robin over the survivors).
+    """Elastic rescale plan for the SODDA observation grid. Deterministic
+    and communication-minimal in both directions.
 
-    Shrink only: growing would need a data re-partitioning plan this
-    function does not produce, and the old code silently returned a no-op
-    plan covering only the old partitions — raising keeps a caller from
-    mistaking that for a valid expansion.
+    Shrink (``new_P < old_P``): the plan maps each surviving partition to
+    the old partitions it absorbs — only the ``old_P - new_P`` lost
+    partitions move, round-robin over the survivors.
+
+    Grow (``new_P > old_P``): the plan is a *re-partitioning* plan — each
+    existing partition keeps its own rows (``{p: [p]}``) and the
+    ``new_P - old_P`` new partitions start empty (``{p: []}``); their rows
+    are materialized by the data plane (:func:`regrow_plane` regenerates
+    them bitwise from the plane's generation key), not shuffled from
+    survivors. ``moved`` counts the rows the new partitions must be filled
+    with: ``(new_P - old_P) * n_per_partition``.
+
+    Either way ``plan`` covers exactly ``range(new_P)`` and every listed
+    source is a valid old partition, so a caller can drive placement
+    directly off it.
     """
     if new_P < 1:
         raise ValueError(f"new_P must be >= 1, got {new_P}")
-    if new_P > old_P:
-        raise ValueError(
-            f"rescale_plan only plans shrinks (got grow {old_P} -> {new_P}): "
-            "growing the grid needs a re-partitioning of existing rows, not "
-            "an absorption plan — repartition the data plane instead")
+    if new_P > old_P:  # grow: keep every old row in place, fill the tail
+        plan = {p: [p] for p in range(old_P)}
+        plan.update({p: [] for p in range(old_P, new_P)})
+        moved = (new_P - old_P) * n_per_partition
+        return plan, moved
     plan = {p: [p] for p in range(new_P)}
     for lost in range(new_P, old_P):  # shrink: round-robin the lost rows
         plan[lost % new_P].append(lost)
     moved = sum(len(v) - 1 for v in plan.values()) * n_per_partition
     return plan, moved
+
+
+class StragglerRescale(RuntimeError):
+    """Control-flow signal from a :class:`SegmentSupervisor` whose
+    ``straggler_action`` is ``"rescale"``: a consecutive-flag streak hit
+    ``straggler_patience``, so the run should shrink past the flagged
+    worker instead of continuing to wait on it.
+
+    Deliberately a RuntimeError subclass that the supervisor's own retry
+    loop **re-raises instead of retrying** — the decision must reach the
+    elastic layer (:func:`run_elastic_auto`), which restores the committed
+    iterate and restarts on the smaller grid. Carries ``iters_done`` (the
+    committed boundary the decision was made at) and ``streak``.
+    """
+
+    def __init__(self, iters_done: int, streak: int):
+        super().__init__(
+            f"straggler streak of {streak} flagged segments at "
+            f"iters_done={iters_done}: rescale past the flagged worker")
+        self.iters_done = int(iters_done)
+        self.streak = int(streak)
 
 
 class TrainSupervisor:
@@ -192,9 +234,23 @@ class SegmentSupervisor:
     compiled dispatch plus the checkpoint write — feed ``straggler``
     (:class:`StragglerPolicy`); a flagged segment is recorded in
     :attr:`events` and handed to ``on_straggler(iters_done, seconds)``.
-    The production response (re-shard the slow worker's partition) is the
-    :func:`run_elastic` path; here the policy layer stays deterministic and
-    host-side.
+
+    The supervisor can also *respond*: ``straggler_patience`` consecutive
+    flagged segments (the serial stand-in for "the same worker flagged in
+    consecutive windows") trigger ``straggler_action``:
+
+    * ``None`` — log the response event and call
+      ``on_straggler_response(iters_done, streak)``; scheduling continues.
+    * ``"rescale"`` — raise :class:`StragglerRescale` so the elastic layer
+      (:func:`run_elastic_auto`) shrinks past the flagged worker. The
+      retry loop re-raises it — a rescale decision is not a fault.
+    * ``"speculate"`` — speculative re-execution:
+      :func:`repro.core.driver.replay_segment` re-runs the flagged span
+      from the previous commit and cross-checks the committed carry
+      bitwise. A mismatch raises (the commit is not trustworthy); a match
+      or a refusal (no predecessor commit) is logged and the run continues.
+
+    The streak resets on any unflagged segment and after a response fires.
 
     ``sleep`` and ``clock`` are injectable so the fault-injection suite runs
     with a fake clock and zero real sleeping (``repro.testing.faults``).
@@ -204,18 +260,72 @@ class SegmentSupervisor:
                  backoff_max_s: float = 5.0,
                  straggler: Optional[StragglerPolicy] = None,
                  on_straggler: Optional[Callable] = None,
+                 straggler_patience: int = 0,
+                 straggler_action: Optional[str] = None,
+                 on_straggler_response: Optional[Callable] = None,
                  sleep: Callable = time.sleep,
                  clock: Callable = time.monotonic):
+        if straggler_action not in (None, "rescale", "speculate"):
+            raise ValueError(
+                f"straggler_action must be None, 'rescale' or 'speculate', "
+                f"got {straggler_action!r}")
+        if straggler_patience < 0:
+            raise ValueError(
+                f"straggler_patience must be >= 0, got {straggler_patience}")
+        if straggler_action is not None and straggler_patience < 1:
+            raise ValueError(
+                f"straggler_action={straggler_action!r} needs "
+                f"straggler_patience >= 1 to ever fire, got "
+                f"{straggler_patience}")
         self.max_restarts = max_restarts
         self.backoff_base_s = backoff_base_s
         self.backoff_max_s = backoff_max_s
         self.straggler = straggler if straggler is not None else StragglerPolicy()
         self.on_straggler = on_straggler
+        self.straggler_patience = straggler_patience
+        self.straggler_action = straggler_action
+        self.on_straggler_response = on_straggler_response
         self.sleep = sleep
         self.clock = clock
         self.restarts = 0  # consecutive restarts without committed progress
         self.total_restarts = 0
+        self._last_committed: Optional[int] = None
+        self._streak = 0  # consecutive flagged segments
         self.events: List[str] = []
+
+    def backoff_delay(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based):
+        ``backoff_base_s * 2**(attempt-1)`` capped at ``backoff_max_s`` —
+        non-decreasing in ``attempt`` (property-tested)."""
+        if attempt < 1:
+            raise ValueError(f"attempt is 1-based, got {attempt}")
+        return min(self.backoff_max_s,
+                   self.backoff_base_s * 2 ** (attempt - 1))
+
+    def note_failure(self, committed: Optional[int],
+                     exc_name: str = "Exception") -> Optional[float]:
+        """Account one failed attempt against the consecutive-restart
+        budget. ``committed`` is the newest committed step visible after
+        the failure; a step strictly newer than the previous failure saw
+        proves progress and resets the consecutive counter **before** this
+        failure is counted. Returns the backoff delay to sleep before
+        retrying, or ``None`` when the budget is exhausted (caller
+        re-raises)."""
+        progressed = committed is not None and (
+            self._last_committed is None or committed > self._last_committed)
+        if progressed:
+            self.restarts = 0
+        self._last_committed = committed
+        self.restarts += 1
+        self.total_restarts += 1
+        self.events.append(
+            f"restart#{self.restarts}@"
+            f"{'-' if committed is None else committed}:{exc_name}")
+        if self.restarts > self.max_restarts:
+            return None
+        delay = self.backoff_delay(self.restarts)
+        self.events.append(f"backoff:{delay:.3f}s")
+        return delay
 
     def run_resumable(self, key, data, cfg, iters: int,
                       backend: str = "reference", *, checkpoint_dir: str,
@@ -225,12 +335,13 @@ class SegmentSupervisor:
         """:func:`repro.core.driver.run_resumable` under supervision.
 
         Same signature and ``(final_state, history)`` contract; the two
-        segment seams are wrapped (timing + straggler detection) and chained
-        to the caller's callbacks, which remain the fault-injection points.
+        segment seams are wrapped (timing + straggler detection/response)
+        and chained to the caller's callbacks, which remain the
+        fault-injection points.
         """
         from repro.core import driver
 
-        last_committed = latest_step(checkpoint_dir)
+        self._last_committed = latest_step(checkpoint_dir)
         t_ref = [self.clock()]
 
         def _start(done):
@@ -242,10 +353,20 @@ class SegmentSupervisor:
             dt = self.clock() - t_ref[0]
             if self.straggler.record(dt):
                 self.events.append(f"straggler@{done}:{dt:.3f}s")
+                self._streak += 1
                 if self.on_straggler is not None:
                     self.on_straggler(done, dt)
+            else:
+                self._streak = 0
+            respond = (self.straggler_patience
+                       and self._streak >= self.straggler_patience)
             if on_segment is not None:
                 on_segment(done)
+            if respond:
+                # After the caller's seam: an injected boundary fault wins
+                # over the response, like a real preemption racing it.
+                self._respond(done, key, data, cfg, backend,
+                              checkpoint_dir, kwargs)
 
         while True:
             try:
@@ -253,27 +374,53 @@ class SegmentSupervisor:
                     key, data, cfg, iters, backend,
                     checkpoint_dir=checkpoint_dir, on_segment=_end,
                     on_segment_start=_start, **kwargs)
+            except StragglerRescale:
+                raise  # a scheduling decision, not a fault — never retried
             except ValueError:
                 raise  # misconfiguration — a retry would replay it verbatim
             except Exception as exc:
-                committed = latest_step(checkpoint_dir)
-                progressed = committed is not None and (
-                    last_committed is None or committed > last_committed)
-                if progressed:
-                    self.restarts = 0
-                last_committed = committed
-                self.restarts += 1
-                self.total_restarts += 1
-                self.events.append(
-                    f"restart#{self.restarts}@"
-                    f"{'-' if committed is None else committed}:"
-                    f"{type(exc).__name__}")
-                if self.restarts > self.max_restarts:
+                delay = self.note_failure(latest_step(checkpoint_dir),
+                                          type(exc).__name__)
+                if delay is None:
                     raise
-                delay = min(self.backoff_max_s,
-                            self.backoff_base_s * 2 ** (self.restarts - 1))
-                self.events.append(f"backoff:{delay:.3f}s")
                 self.sleep(delay)
+
+    def _respond(self, done, key, data, cfg, backend, checkpoint_dir, kwargs):
+        """Fire the configured straggler response at committed boundary
+        ``done`` and reset the streak."""
+        from repro.core import driver
+
+        streak, self._streak = self._streak, 0
+        action = self.straggler_action or "log"
+        self.events.append(
+            f"straggler-response@{done}:{action}(streak={streak})")
+        if self.on_straggler_response is not None:
+            self.on_straggler_response(done, streak)
+        if self.straggler_action == "rescale":
+            raise StragglerRescale(done, streak)
+        if self.straggler_action == "speculate":
+            eng = {k: v for k, v in kwargs.items()
+                   if k not in ("segment_iters", "record_every", "mesh",
+                                "keep", "stream_stats", "commit_every",
+                                "on_commit", "history")}
+            report = driver.replay_segment(
+                key, data, cfg, backend, checkpoint_dir=checkpoint_dir,
+                segment_iters=kwargs["segment_iters"],
+                record_every=kwargs.get("record_every", 1),
+                mesh=kwargs.get("mesh"), **eng)
+            if report["replayed"]:
+                self.events.append(
+                    f"speculate@{done}:[{report['start']},{report['end']}] "
+                    f"match={report['match']}")
+                if not report["match"]:
+                    raise RuntimeError(
+                        f"speculative re-execution of "
+                        f"[{report['start']}, {report['end']}] diverged "
+                        "from the committed carry: the flagged worker's "
+                        "commit is not trustworthy")
+            else:
+                self.events.append(
+                    f"speculate@{done}:skipped({report['reason']})")
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +457,16 @@ class SurvivorDataPlane(DataPlane):
                              f"P={self.P}")
         return self._base.y_block(p)
 
+    @property
+    def generation_key(self):
+        """Delegated: a survivor view regrows from its base's key, so a
+        shrink followed by a grow round-trips through the same tiles."""
+        return self._base.generation_key
+
+    @property
+    def flip_prob(self):
+        return self._base.flip_prob
+
 
 def shrink_plane(data, new_P: int):
     """The surviving data after a shrink to ``new_P`` observation
@@ -320,10 +477,87 @@ def shrink_plane(data, new_P: int):
     return SurvivorDataPlane(as_data_plane(data), new_P)
 
 
+class GrownDataPlane(DataPlane):
+    """View of a :class:`repro.data.plane.DataPlane` extended to
+    ``new_P > base.P`` observation partitions — capacity returning after a
+    shrink, or a cluster scale-up.
+
+    Partitions below ``base.P`` delegate to the base (bitwise its tiles);
+    partitions at and above regenerate from the base's generation key.
+    Because the synthetic generators fold tile keys per ``(p, q)`` — never
+    per grid shape — a regrown partition is bitwise-equal to the one a
+    fresh plane built on the ``(new_P, Q)`` grid would hold, which is what
+    keeps grow-elasticity deterministic (pinned by the round-trip test).
+
+    Only key-derived static planes can grow: a plane without a
+    ``generation_key`` has no recipe for rows it never held, and a
+    streaming plane's windows advance with the cursor (its epoch schedule
+    is owned by the resumable driver) — both are rejected with TypeError.
+    """
+
+    def __init__(self, base, new_P: int):
+        if base.is_streaming:
+            raise TypeError(
+                "cannot grow a streaming plane: its windows advance with "
+                "the run's stream epoch, so regrown partitions have no "
+                "static recipe — grow the underlying static plane instead")
+        key = base.generation_key
+        if key is None:
+            raise TypeError(
+                f"{type(base).__name__} has no generation key: only "
+                "key-derived planes can regrow lost partitions bitwise")
+        if not new_P > base.P:
+            raise ValueError(
+                f"GrownDataPlane only grows: need new_P > {base.P}, got "
+                f"{new_P} (use shrink_plane to shrink)")
+        self._base = base
+        self._init_grid(base.n * new_P, base.M, new_P, base.Q)
+
+    def x_tile(self, p: int, q: int):
+        if not (0 <= p < self.P and 0 <= q < self.Q):
+            raise IndexError(f"tile ({p}, {q}) outside grown grid "
+                             f"({self.P}, {self.Q})")
+        if p < self._base.P:
+            return self._base.x_tile(p, q)
+        return synthetic.svm_tile_x(self._base.generation_key, p, q,
+                                    self.n, self.m)
+
+    def y_block(self, p: int):
+        if not 0 <= p < self.P:
+            raise IndexError(f"row block {p} outside grown grid P={self.P}")
+        if p < self._base.P:
+            return self._base.y_block(p)
+        return synthetic.svm_label_block(
+            self._base.generation_key, p, self.n, self.Q, self.m,
+            flip_prob=self._base.flip_prob)
+
+    @property
+    def generation_key(self):
+        """Delegated, so a grown plane can shrink/grow again bitwise."""
+        return self._base.generation_key
+
+    @property
+    def flip_prob(self):
+        return self._base.flip_prob
+
+
+def regrow_plane(data, new_P: int):
+    """The data after growing back to ``new_P`` observation partitions: a
+    :class:`GrownDataPlane` view regenerating partitions ``base.P..new_P-1``
+    bitwise from the base's generation key. The grown problem gains rows —
+    like the shrink, a different optimization problem with the same optimum
+    family (SODDA's theory holds for any P), held to the ``STALENESS``
+    tolerance policy across the transition."""
+    return GrownDataPlane(as_data_plane(data), new_P)
+
+
 def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
                 checkpoint_dir: str, segment_iters: int,
                 lose_partition_at: int, new_P: Optional[int] = None,
+                regrow_at: Optional[int] = None,
+                regrow_P: Optional[int] = None,
                 record_every: int = 1, keep: int = 3, mesh=None,
+                commit_every: int = 0,
                 supervisor: Optional[SegmentSupervisor] = None,
                 on_segment: Optional[Callable] = None,
                 on_segment_start: Optional[Callable] = None, **options):
@@ -342,22 +576,32 @@ def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
     fresh warm-up exchange there; the old buffer aggregated lost data).
     Phase 2 resumes it to ``iters`` on the surviving data.
 
-    Both phases run under one :class:`SegmentSupervisor` (straggler
-    statistics and restart accounting span the rescale) and each phase keeps
-    the driver's bitwise kill-and-resume contract; the *shrunk trajectory
-    itself* is a different optimization problem (fewer observations), held
-    to the same-optimum ``STALENESS`` tolerance policy in
-    ``tests/test_fault_tolerance.py``.
+    Capacity can also *return*: with ``regrow_at`` (a later segment
+    boundary) the run grows back to ``regrow_P`` partitions (default
+    ``cfg.P``) — :func:`rescale_plan` plans the re-partitioning,
+    :func:`regrow_plane` extends the surviving plane (the regrown
+    partitions regenerate bitwise from the generation key), the engine
+    bundle is rebuilt on the larger grid and the carry migrates again, so
+    one call composes a full shrink→grow round-trip.
 
-    ``on_segment`` / ``on_segment_start`` are forwarded to both supervised
-    phases — the fault-injection seams stay available across the rescale
-    (phase-2 callbacks see the shrunk run's ``iters_done``).
+    All phases run under one :class:`SegmentSupervisor` (straggler
+    statistics and restart accounting span the rescales) and each phase
+    keeps the driver's bitwise kill-and-resume contract — including
+    in-scan commits when ``commit_every`` is set (explicit here so it
+    reaches the driver, not the engine options); the *rescaled
+    trajectories* themselves are different optimization problems (fewer,
+    then more, observations), held to the same-optimum ``STALENESS``
+    tolerance policy in ``tests/test_fault_tolerance.py``.
+
+    ``on_segment`` / ``on_segment_start`` are forwarded to every supervised
+    phase — the fault-injection seams stay available across the rescales
+    (later phases' callbacks see that phase's ``iters_done``).
 
     Returns ``(final_state, history, report)`` where ``history`` carries the
-    uninterrupted run's recording ticks (phase-1 objectives over the full
-    data, phase-2 over the surviving data — the objective may step at the
-    rescale boundary) and ``report`` records the plan, moved rows, shrunk
-    config/plane and the supervisor's event log.
+    uninterrupted run's recording ticks (each phase's objectives over its
+    own data — the objective may step at a rescale boundary) and ``report``
+    records the plans, moved rows, rescaled configs/planes and the
+    supervisor's event log.
     """
     from repro.core import driver, engine
 
@@ -369,6 +613,10 @@ def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
             f"elastic rescale needs the data plane partitioned like the run "
             f"(plane P={plane.P}, cfg P={cfg.P}); pass a plane built on "
             "cfg's grid")
+    if not 1 <= new_P < cfg.P:
+        raise ValueError(
+            f"a partition loss shrinks the grid: need 1 <= new_P < {cfg.P}, "
+            f"got {new_P} (regrow_at/regrow_P is the grow direction)")
     if not 0 < lose_partition_at < iters:
         raise ValueError(
             f"lose_partition_at must be inside the run (0, {iters}), got "
@@ -378,6 +626,23 @@ def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
             f"lose_partition_at ({lose_partition_at}) must be a segment "
             f"boundary (multiple of segment_iters={segment_iters}): a "
             "partition is droppable exactly where a committed carry exists")
+    if regrow_at is not None:
+        regrow_P = cfg.P if regrow_P is None else regrow_P
+        if not lose_partition_at < regrow_at < iters:
+            raise ValueError(
+                f"regrow_at must be inside ({lose_partition_at}, {iters}), "
+                f"got {regrow_at}")
+        if regrow_at % segment_iters:
+            raise ValueError(
+                f"regrow_at ({regrow_at}) must be a segment boundary "
+                f"(multiple of segment_iters={segment_iters})")
+        if regrow_P <= new_P:
+            raise ValueError(
+                f"regrow_P must exceed the shrunk P ({new_P}), got "
+                f"{regrow_P}")
+    elif regrow_P is not None:
+        raise ValueError("regrow_P without regrow_at: pass the boundary "
+                         "the capacity returns at")
 
     plan, moved = rescale_plan(cfg.P, new_P, cfg.n)  # validates the shrink
 
@@ -388,7 +653,7 @@ def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
     state1, hist1 = sup.run_resumable(
         key, plane, cfg, lose_partition_at, backend, checkpoint_dir=d_full,
         segment_iters=segment_iters, record_every=record_every, mesh=mesh,
-        keep=keep, **seams, **options)
+        keep=keep, commit_every=commit_every, **seams, **options)
     sup.events.append(
         f"rescale@{lose_partition_at}:P{cfg.P}->P{new_P} ({moved} rows "
         "absorbable; dropped here)")
@@ -404,10 +669,131 @@ def run_elastic(key, data, cfg, iters: int, backend: str = "reference", *,
             checkpoint_dir=d_shrunk, segment_iters=segment_iters,
             record_every=record_every, mesh=new_mesh, history=hist1[:-1],
             keep=keep, **options)
+    phase2_end = iters if regrow_at is None else regrow_at
+    state, hist = sup.run_resumable(
+        key, survivors, new_cfg, phase2_end, backend,
+        checkpoint_dir=d_shrunk, segment_iters=segment_iters,
+        record_every=record_every, mesh=new_mesh, keep=keep,
+        commit_every=commit_every, **seams, **options)
+    report = {"plan": plan, "moved_rows": moved, "new_cfg": new_cfg,
+              "survivors": survivors}
+    if regrow_at is not None:
+        grow_plan, regrown = rescale_plan(new_P, regrow_P, cfg.n)
+        sup.events.append(
+            f"rescale@{regrow_at}:P{new_P}->P{regrow_P} ({regrown} rows "
+            "regrown from the generation key)")
+        grow_cfg, grow_mesh, _ = engine.rescale_bundle(new_cfg, backend,
+                                                       regrow_P, **options)
+        grown = regrow_plane(survivors, regrow_P)
+        # "-regrown" keeps this directory distinct from d_full even when
+        # capacity returns to the original P
+        d_grown = os.path.join(checkpoint_dir, f"P{regrow_P}-regrown")
+        if latest_step(d_grown) is None:
+            driver.migrate_resumable(
+                key, grown, grow_cfg, regrow_at, state, backend,
+                checkpoint_dir=d_grown, segment_iters=segment_iters,
+                record_every=record_every, mesh=grow_mesh,
+                history=hist[:-1], keep=keep, **options)
+        state, hist = sup.run_resumable(
+            key, grown, grow_cfg, iters, backend, checkpoint_dir=d_grown,
+            segment_iters=segment_iters, record_every=record_every,
+            mesh=grow_mesh, keep=keep, commit_every=commit_every,
+            **seams, **options)
+        report.update(grow_plan=grow_plan, regrown_rows=regrown,
+                      grow_cfg=grow_cfg, grown=grown)
+    report["events"] = list(sup.events)
+    return state, hist, report
+
+
+def run_elastic_auto(key, data, cfg, iters: int, backend: str = "reference",
+                     *, checkpoint_dir: str, segment_iters: int,
+                     new_P: Optional[int] = None, patience: int = 2,
+                     record_every: int = 1, keep: int = 3, mesh=None,
+                     commit_every: int = 0,
+                     supervisor: Optional[SegmentSupervisor] = None,
+                     on_segment: Optional[Callable] = None,
+                     on_segment_start: Optional[Callable] = None,
+                     **options):
+    """:func:`run_elastic` with the shrink boundary chosen by the
+    supervisor's straggler response instead of preplanned.
+
+    The run starts on ``cfg``'s full grid under a
+    :class:`SegmentSupervisor` configured with
+    ``straggler_action="rescale"`` (a supplied ``supervisor`` must be
+    configured that way). When ``patience`` consecutive segments are
+    flagged, the supervisor raises :class:`StragglerRescale` at a committed
+    boundary; this function catches it, lifts the committed iterate off
+    the aborted run with :func:`repro.core.driver.restore_resumable_state`,
+    shrinks to ``new_P`` (default ``P - 1``) exactly as :func:`run_elastic`
+    does, and finishes on the surviving data under the same supervisor. A
+    run that never triggers the response completes on the full grid and
+    reports ``rescaled=False``.
+
+    Returns ``(final_state, history, report)``; ``report["rescaled"]``
+    says whether the response fired and ``report["boundary"]`` where.
+    """
+    from repro.core import driver, engine
+
+    if supervisor is None:
+        sup = SegmentSupervisor(straggler_patience=patience,
+                                straggler_action="rescale")
+    else:
+        sup = supervisor
+        if sup.straggler_action != "rescale":
+            raise ValueError(
+                "run_elastic_auto needs a supervisor with "
+                f"straggler_action='rescale', got {sup.straggler_action!r}")
+    plane = as_data_plane(data)
+    if plane.P != cfg.P:
+        raise ValueError(
+            f"elastic rescale needs the data plane partitioned like the run "
+            f"(plane P={plane.P}, cfg P={cfg.P}); pass a plane built on "
+            "cfg's grid")
+    new_P = cfg.P - 1 if new_P is None else new_P
+    if not 1 <= new_P < cfg.P:
+        raise ValueError(
+            f"the straggler response shrinks the grid: need 1 <= new_P < "
+            f"{cfg.P}, got {new_P}")
+
+    d_full = os.path.join(checkpoint_dir, f"P{cfg.P}")
+    d_shrunk = os.path.join(checkpoint_dir, f"P{new_P}")
+    seams = {"on_segment": on_segment, "on_segment_start": on_segment_start}
+    try:
+        state, hist = sup.run_resumable(
+            key, plane, cfg, iters, backend, checkpoint_dir=d_full,
+            segment_iters=segment_iters, record_every=record_every,
+            mesh=mesh, keep=keep, commit_every=commit_every, **seams,
+            **options)
+        return state, hist, {"rescaled": False, "events": list(sup.events)}
+    except StragglerRescale as sig:
+        boundary = sig.iters_done
+
+    # The decision fired right after the boundary commit, so the latest
+    # committed state *is* the boundary; restore it as the migration seed.
+    done, state1, hist1 = driver.restore_resumable_state(
+        key, plane, cfg, backend, checkpoint_dir=d_full, mesh=mesh,
+        step=boundary, **options)
+    plan, moved = rescale_plan(cfg.P, new_P, cfg.n)
+    sup.events.append(
+        f"rescale@{boundary}:P{cfg.P}->P{new_P} (straggler response; "
+        f"{moved} rows absorbable, dropped here)")
+    new_cfg, new_mesh, _ = engine.rescale_bundle(cfg, backend, new_P,
+                                                 **options)
+    survivors = shrink_plane(plane, new_P)
+    if latest_step(d_shrunk) is None:
+        # stamped histories stop before the boundary tick, so nothing to
+        # strip (unlike run_elastic's fresh-run history)
+        driver.migrate_resumable(
+            key, survivors, new_cfg, boundary, state1, backend,
+            checkpoint_dir=d_shrunk, segment_iters=segment_iters,
+            record_every=record_every, mesh=new_mesh, history=hist1,
+            keep=keep, **options)
     state, hist = sup.run_resumable(
         key, survivors, new_cfg, iters, backend, checkpoint_dir=d_shrunk,
         segment_iters=segment_iters, record_every=record_every,
-        mesh=new_mesh, keep=keep, **seams, **options)
-    report = {"plan": plan, "moved_rows": moved, "new_cfg": new_cfg,
+        mesh=new_mesh, keep=keep, commit_every=commit_every, **seams,
+        **options)
+    report = {"rescaled": True, "boundary": boundary, "plan": plan,
+              "moved_rows": moved, "new_cfg": new_cfg,
               "survivors": survivors, "events": list(sup.events)}
     return state, hist, report

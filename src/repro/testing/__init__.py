@@ -14,8 +14,8 @@ from repro.testing.devices import (DEFAULT_TEST_DEVICES,
                                    enable_compilation_cache,
                                    force_host_devices, require_host_devices,
                                    run_forced_subprocess, sodda_test_mesh)
-from repro.testing.faults import (FakeClock, FaultInjector, Preemption,
-                                  SleepRecorder)
+from repro.testing.faults import (ClockAdvancer, FakeClock, FaultInjector,
+                                  Preemption, SleepRecorder)
 from repro.testing.fixtures import (CONFORMANCE_ITERS, make_data_plane,
                                     make_problem, medium_fixture_config,
                                     small_fixture_config)
@@ -40,6 +40,7 @@ __all__ = [
     "make_problem",
     "small_fixture_config",
     "medium_fixture_config",
+    "ClockAdvancer",
     "FakeClock",
     "FaultInjector",
     "Preemption",

@@ -12,6 +12,9 @@ exercised in tier-1 tests with zero real sleeping and zero flakiness:
 * :class:`FakeClock` — an injectable ``clock`` whose time only moves when a
   test calls :meth:`FakeClock.advance`; plant a straggler by advancing it
   inside a segment.
+* :class:`ClockAdvancer` — the declarative form of that planting: a seam
+  callback that advances the clock by scheduled amounts at chosen
+  ``iters_done`` values, so a segment *reads* as slow without sleeping.
 * :class:`SleepRecorder` — an injectable ``sleep`` that records requested
   backoff delays instead of waiting them out.
 """
@@ -76,6 +79,40 @@ class FakeClock:
         if dt < 0:
             raise ValueError(f"time only moves forward, got dt={dt}")
         self.now += dt
+
+
+class ClockAdvancer:
+    """Plants stragglers declaratively: a segment-seam callback that
+    advances a :class:`FakeClock` by ``schedule[iters_done]`` seconds when
+    it fires at ``iters_done``.
+
+    Pass it as ``on_segment_start`` under a supervisor built with the same
+    clock: the supervisor timestamps the segment at ``on_segment_start``
+    *before* chaining to the caller's callback and reads the clock again
+    at ``on_segment``, so an advance planted at a segment's starting
+    ``iters_done`` lands inside the measured window and that segment
+    *reads* as ``schedule[iters_done]`` seconds slow — with zero real
+    sleeping. (Planted at ``on_segment`` it would land *after* the
+    measurement.) ``seen`` logs every visit; each scheduled advance fires
+    on every visit to its ``iters_done`` (a retried boundary straggles
+    again).
+    """
+
+    def __init__(self, clock: FakeClock, schedule: Dict[int, float]):
+        for done, dt in schedule.items():
+            if done < 0 or dt < 0:
+                raise ValueError(
+                    f"schedule entries need iters_done >= 0 and dt >= 0, "
+                    f"got {done}: {dt}")
+        self.clock = clock
+        self.schedule = dict(schedule)
+        self.seen: List[int] = []
+
+    def __call__(self, iters_done: int):
+        self.seen.append(iters_done)
+        dt = self.schedule.get(iters_done, 0.0)
+        if dt:
+            self.clock.advance(dt)
 
 
 class SleepRecorder:

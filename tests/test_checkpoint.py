@@ -165,6 +165,77 @@ def test_supervisor_restarts_from_checkpoint(tmp_path):
     assert any(e.startswith("restart@7") for e in sup.events)
 
 
+def test_corrupt_manifest_raises_named_checkpoint_error(tmp_path):
+    """Regression (ISSUE 8): a crashed writer (or bit rot) can leave a
+    truncated/garbage ``manifest.json`` in a committed-looking step dir;
+    ``json.load`` used to surface a raw JSONDecodeError with no hint of
+    *which* checkpoint was bad. Both read paths must raise the named
+    :class:`CheckpointError` carrying the offending path."""
+    from repro.checkpoint import CheckpointError, read_extra
+    d = str(tmp_path / "ckpt")
+    path = save_checkpoint(d, 4, tree(), extra={"k": 1})
+    manifest = os.path.join(path, "manifest.json")
+    with open(manifest, "w") as f:
+        f.write('{"step": 4, "extra": {"k"')  # truncated mid-write
+    with pytest.raises(CheckpointError, match="manifest.json"):
+        read_extra(d, step=4)
+    with pytest.raises(CheckpointError, match="corrupt or truncated"):
+        restore_checkpoint(d, tree(), step=4)
+    # CheckpointError is a RuntimeError (supervisors may retry on another
+    # committed step), never a ValueError (which supervisors propagate)
+    assert issubclass(CheckpointError, RuntimeError)
+    assert not issubclass(CheckpointError, ValueError)
+
+
+def test_non_object_manifest_raises_checkpoint_error(tmp_path):
+    """Valid JSON that is not a manifest (a bare list, an object without
+    'step') is the same failure class as truncation, not a KeyError."""
+    from repro.checkpoint import CheckpointError, read_extra
+    d = str(tmp_path / "ckpt")
+    path = save_checkpoint(d, 2, tree())
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write('[1, 2, 3]')
+    with pytest.raises(CheckpointError, match="expected an"):
+        read_extra(d, step=2)
+
+
+def test_stray_step_named_file_is_ignored(tmp_path):
+    """Regression (ISSUE 8): a plain FILE named like a step entry (e.g. a
+    crashed writer's log redirect ``step_0000000005``) made the directory
+    scan treat it as a checkpoint; ``_step_entries`` now requires a
+    directory."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree())
+    with open(os.path.join(d, "step_0000000005"), "w") as f:
+        f.write("not a checkpoint")
+    assert latest_step(d) == 1
+    assert restore_checkpoint(d, tree())[0] == 1
+    save_checkpoint(d, 2, tree(), keep=1)  # GC must not try to rmtree it
+    assert os.path.isfile(os.path.join(d, "step_0000000005"))
+
+
+def test_committed_steps_listing(tmp_path):
+    from repro.checkpoint import committed_steps
+    d = str(tmp_path / "ckpt")
+    assert committed_steps(d) == []  # missing directory: empty, not raise
+    for s in (4, 2, 8):
+        save_checkpoint(d, s, tree(), keep=10)
+    os.makedirs(os.path.join(d, "step_0000000006"))  # uncommitted: excluded
+    assert committed_steps(d) == [2, 4, 8]  # ascending
+
+
+def test_manager_save_is_unconditional(tmp_path):
+    """``CheckpointManager.save`` (the in-scan commit path) writes at any
+    step, regardless of the ``every`` cadence ``maybe_save`` enforces."""
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, every=100)
+    assert not mgr.maybe_save(7, tree())
+    mgr.save(7, tree(), extra={"src": "in-scan"})
+    assert latest_step(d) == 7
+    from repro.checkpoint import read_extra
+    assert read_extra(d) == (7, {"src": "in-scan"})
+
+
 def test_straggler_policy_flags_outlier():
     sp = StragglerPolicy(window=20, z_threshold=3.0)
     for _ in range(20):

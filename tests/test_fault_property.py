@@ -1,0 +1,124 @@
+"""Property-based invariants for the supervision policy layer (ISSUE 8).
+
+These generate adversarial inputs for the pure-Python policy objects —
+:class:`StragglerPolicy` and :class:`SegmentSupervisor`'s budget/backoff
+bookkeeping — where example-based tests only pin a handful of points:
+
+* ``p50`` is always the median of the *trailing window*, never the whole
+  run's.
+* ``_durations`` never exceeds ``window`` entries.
+* The consecutive-restart budget resets exactly on a strictly-newer
+  committed step, and only then.
+* ``backoff_delay`` is non-decreasing in the attempt number and capped.
+
+The container may not ship ``hypothesis``; the suite skips cleanly then,
+and ``tests/test_fault_tolerance.py`` keeps hypothesis-free fallbacks for
+every invariant here so the contract is always enforced somewhere.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property suite needs hypothesis; the same "
+    "invariants have example-based fallbacks in test_fault_tolerance.py")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.distributed.fault_tolerance import (SegmentSupervisor,  # noqa: E402
+                                               StragglerPolicy)
+from repro.testing import FakeClock, SleepRecorder  # noqa: E402
+
+pytestmark = pytest.mark.fault
+
+# deterministic CI profile: bounded examples, no wall-clock deadline (the
+# first example pays any import/jit warm-up and must not flake the suite)
+settings.register_profile("ci", max_examples=20, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")
+
+durations = st.floats(min_value=0.0, max_value=1e4,
+                      allow_nan=False, allow_infinity=False)
+
+
+def _supervisor(max_restarts=3, base=0.05, cap=5.0):
+    return SegmentSupervisor(max_restarts=max_restarts, backoff_base_s=base,
+                             backoff_max_s=cap, sleep=SleepRecorder(),
+                             clock=FakeClock())
+
+
+@given(window=st.integers(1, 20), ds=st.lists(durations, max_size=80))
+def test_p50_is_trailing_window_median(window, ds):
+    sp = StragglerPolicy(window=window, warmup=1)
+    for d in ds:
+        sp.record(d)
+    assert len(sp._durations) <= window  # history bounded to the window
+    if ds:
+        assert sp.p50 == pytest.approx(float(np.median(ds[-window:])))
+    else:
+        assert sp.p50 == 0.0
+
+
+@given(window=st.integers(1, 20), ds=st.lists(durations, min_size=1,
+                                              max_size=80))
+def test_straggler_never_fires_during_warmup(window, ds):
+    """The first ``warmup`` records can never flag — there is no window
+    *before* them to be an outlier against."""
+    warmup = window  # the strictest legal warmup
+    sp = StragglerPolicy(window=window, warmup=warmup)
+    flags = [sp.record(d) for d in ds]
+    assert not any(flags[:warmup])
+
+
+@given(attempts=st.integers(2, 40), base=st.floats(1e-3, 10.0),
+       cap=st.floats(1e-3, 100.0))
+def test_backoff_monotone_and_capped(attempts, base, cap):
+    sup = _supervisor(base=base, cap=cap)
+    delays = [sup.backoff_delay(a) for a in range(1, attempts + 1)]
+    assert all(b >= a for a, b in zip(delays, delays[1:]))
+    assert all(d <= cap for d in delays)
+    assert delays[0] == pytest.approx(min(base, cap))
+
+
+@given(st.lists(st.one_of(st.none(), st.integers(0, 30)), min_size=1,
+                max_size=40),
+       st.integers(1, 5))
+def test_budget_resets_exactly_on_strictly_newer_commit(commits, budget):
+    """Feed an arbitrary sequence of observed committed steps into
+    ``note_failure`` and check the consecutive counter against a reference
+    reconstruction: it must equal the number of failures since the last
+    strictly-newer committed step (and the budget must trip exactly when
+    that count exceeds ``max_restarts``)."""
+    sup = _supervisor(max_restarts=budget)
+    consecutive = 0
+    last = None
+    for committed in commits:
+        progressed = committed is not None and (last is None
+                                                or committed > last)
+        consecutive = 1 if progressed else consecutive + 1
+        last = committed
+        delay = sup.note_failure(committed)
+        assert sup.restarts == consecutive
+        assert (delay is None) == (consecutive > budget)
+        if delay is not None:
+            assert delay == sup.backoff_delay(consecutive)
+    assert sup.total_restarts == len(commits)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.integers(1, 5))
+def test_streak_counts_consecutive_flags_only(flags, patience):
+    """The straggler streak seen by the response trigger equals the length
+    of the trailing run of flagged segments — model it directly against
+    the supervisor's counter."""
+    sup = SegmentSupervisor(straggler_patience=patience,
+                            straggler_action=None, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    streak = 0
+    for flagged in flags:
+        # drive the counter exactly as _end does, minus the run machinery
+        if flagged:
+            sup._streak += 1
+            streak += 1
+        else:
+            sup._streak = 0
+            streak = 0
+        assert sup._streak == streak

@@ -6,25 +6,39 @@ shrink-P elastic run converges to the shrunk problem's optimum under the
 STALENESS same-optimum policy. Every injected failure is deterministic
 (``repro.testing.faults``): fake clock, recorded sleeps, scheduled kills.
 """
+import threading
+
 import jax
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, latest_step
+from repro.checkpoint import (CheckpointManager, committed_steps, latest_step,
+                              read_extra)
 from repro.core import driver
-from repro.distributed.fault_tolerance import (SegmentSupervisor,
+from repro.distributed.fault_tolerance import (GrownDataPlane,
+                                               SegmentSupervisor,
                                                StragglerPolicy,
+                                               StragglerRescale,
                                                SurvivorDataPlane,
-                                               TrainSupervisor, rescale_plan,
-                                               run_elastic, shrink_plane)
-from repro.testing import (STALENESS, FakeClock, FaultInjector, Preemption,
-                           SleepRecorder, assert_objectives_close,
+                                               TrainSupervisor, regrow_plane,
+                                               rescale_plan, run_elastic,
+                                               run_elastic_auto, shrink_plane)
+from repro.testing import (STALENESS, ClockAdvancer, FakeClock, FaultInjector,
+                           Preemption, SleepRecorder, assert_objectives_close,
                            make_data_plane, small_fixture_config,
                            sodda_test_mesh)
 
 pytestmark = pytest.mark.fault
 
 ITERS, SEGMENT, RECORD = 10, 4, 2
+
+BACKENDS = ["reference", "async", "shard_map", "async-mesh"]
+
+
+def _mesh_kw(cfg, backend):
+    if backend in ("shard_map", "async-mesh"):
+        return {"mesh": sodda_test_mesh(cfg)}
+    return {}
 
 
 @pytest.fixture(scope="module")
@@ -90,12 +104,16 @@ def test_straggler_policy_validation():
 # ---------------------------------------------------------------------------
 # rescale_plan
 # ---------------------------------------------------------------------------
-def test_rescale_plan_rejects_grow():
-    """Regression (ISSUE 6): growing silently returned a no-op plan covering
-    only the old partitions with moved=0 — indistinguishable from a valid
-    expansion. Now a ValueError."""
-    with pytest.raises(ValueError, match="shrink"):
-        rescale_plan(4, 5, n_per_partition=10)
+def test_rescale_plan_grow_is_a_repartitioning_plan():
+    """Regression (ISSUE 6 → 8): growing used to silently return a no-op
+    plan covering only the old partitions with moved=0 — indistinguishable
+    from a valid expansion; then it raised. Now it is a real plan: every
+    existing partition keeps its rows, the new partitions start empty, and
+    ``moved`` counts the rows they must be filled with."""
+    plan, moved = rescale_plan(4, 6, n_per_partition=10)
+    assert plan == {0: [0], 1: [1], 2: [2], 3: [3], 4: [], 5: []}
+    assert moved == 20
+    assert sorted(plan) == list(range(6))  # covers exactly the new grid
     with pytest.raises(ValueError, match=">= 1"):
         rescale_plan(4, 0, n_per_partition=10)
 
@@ -297,8 +315,23 @@ def test_rescale_bundle_rebuilds_grid(cfg):
     assert new_cfg.P == 1 and new_cfg.Q == cfg.Q and new_cfg.n == cfg.n
     assert new_cfg.m_tilde == cfg.M // (cfg.Q * 1)
     assert new_mesh is None and bundle.step is not None
-    with pytest.raises(ValueError, match="shrink"):
-        engine.rescale_bundle(cfg, "reference", cfg.P + 1)
+
+
+def test_rescale_bundle_grows_grid(cfg):
+    """Grow direction (ISSUE 8): P'=2P is a fresh bundle on the larger grid
+    with the per-worker feature slice halved; a P' that breaks the M
+    divisibility contract still raises."""
+    from repro.core import engine
+    big_cfg, big_mesh, bundle = engine.rescale_bundle(cfg, "reference",
+                                                      2 * cfg.P)
+    assert big_cfg.P == 2 * cfg.P and big_cfg.Q == cfg.Q
+    assert big_cfg.n == cfg.n and big_cfg.N == cfg.n * 2 * cfg.P
+    assert big_cfg.m_tilde == cfg.M // (cfg.Q * 2 * cfg.P)
+    assert big_mesh is None and bundle.step is not None
+    with pytest.raises(ValueError, match="split into"):
+        engine.rescale_bundle(cfg, "reference", 3)  # M=32 vs Q*P'=6
+    with pytest.raises(ValueError, match=">= 1"):
+        engine.rescale_bundle(cfg, "reference", 0)
 
 
 def test_run_elastic_structure_and_report(cfg, plane, tmp_path):
@@ -397,3 +430,573 @@ def test_migrate_resumable_validates_boundary(cfg, plane, tmp_path):
         driver.migrate_resumable(jax.random.PRNGKey(1), plane, cfg, 3, state,
                                  checkpoint_dir=str(tmp_path / "m"),
                                  segment_iters=SEGMENT)
+
+
+# ---------------------------------------------------------------------------
+# In-scan preemptible commits (ISSUE 8 tentpole): commit_every checkpoints
+# from inside the compiled segment scan, so a mid-segment kill loses at most
+# commit_every iterations.
+# ---------------------------------------------------------------------------
+def test_in_scan_commits_do_not_change_trajectory(cfg, plane, tmp_path):
+    """commit_every must be observationally free: same final state, same
+    history, bitwise — the io_callback only exports the carry, it never
+    re-enters the computation."""
+    key = jax.random.PRNGKey(1)
+    committed = []
+    s0, h0 = driver.run_resumable(key, plane, cfg, ITERS, "reference",
+                                  checkpoint_dir=str(tmp_path / "bare"),
+                                  segment_iters=SEGMENT, record_every=RECORD)
+    s1, h1 = driver.run_resumable(key, plane, cfg, ITERS, "reference",
+                                  checkpoint_dir=str(tmp_path / "cmt"),
+                                  segment_iters=SEGMENT, record_every=RECORD,
+                                  commit_every=RECORD, keep=99,
+                                  on_commit=committed.append)
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+    # boundary steps (4, 8) are owned by the host-side save; the in-scan
+    # sink commits the strictly-interior cadence plus the partial tail
+    assert sorted(committed) == [2, 6, 10]
+    assert committed_steps(str(tmp_path / "cmt")) == [2, 4, 6, 8, 10]
+
+
+def test_commit_every_validation(cfg, plane, tmp_path):
+    key = jax.random.PRNGKey(1)
+    d = str(tmp_path / "c")
+    with pytest.raises(ValueError, match="commit_every"):
+        driver.run_resumable(key, plane, cfg, ITERS, checkpoint_dir=d,
+                             segment_iters=SEGMENT, record_every=RECORD,
+                             commit_every=3)  # not a multiple of record_every
+    with pytest.raises(ValueError, match="commit_every"):
+        driver.run_resumable(key, plane, cfg, ITERS, checkpoint_dir=d,
+                             segment_iters=SEGMENT, record_every=RECORD,
+                             commit_every=8)  # does not divide segment_iters
+    with pytest.raises(ValueError, match="commit_every"):
+        driver.run_resumable(key, plane, cfg, ITERS, checkpoint_dir=d,
+                             segment_iters=SEGMENT, record_every=RECORD,
+                             commit_every=-2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mid_segment_kill_resumes_bitwise(cfg, plane, tmp_path, backend):
+    """Acceptance criterion: on every backend, a kill at a mid-segment
+    commit leaves that commit durable (the run lost < segment_iters) and
+    the resumed run lands bitwise on the uninterrupted trajectory."""
+    key = jax.random.PRNGKey(1)
+    kw = _mesh_kw(cfg, backend)
+    kill_at = SEGMENT + RECORD  # step 6: strictly inside segment [4, 8)
+    inj = FaultInjector({kill_at: 1})
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected fault"):
+        driver.run_resumable(key, plane, cfg, ITERS, backend,
+                             checkpoint_dir=d, segment_iters=SEGMENT,
+                             record_every=RECORD, commit_every=RECORD,
+                             on_commit=inj, **kw)
+    # the in-scan commit at the kill step survived the crash: sub-segment
+    # durability, the whole point of commit_every
+    assert latest_step(d) == kill_at
+    assert kill_at % SEGMENT != 0
+    s_res, h_res = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                        checkpoint_dir=d,
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD,
+                                        commit_every=RECORD, **kw)
+    s_full, h_full = driver.run_resumable(key, plane, cfg, ITERS, backend,
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD, **kw)
+    assert h_res == h_full, f"{backend}: mid-segment resume history diverged"
+    np.testing.assert_array_equal(
+        np.asarray(s_res.w), np.asarray(s_full.w),
+        err_msg=f"{backend}: mid-segment resume final iterate diverged")
+
+
+def test_supervisor_absorbs_in_scan_commit_fault(cfg, plane, tmp_path):
+    """A fault raised inside the io_callback is trapped and re-raised by
+    the driver once the dispatch drains — a RuntimeError the supervisor
+    must treat like any preemption: restore the (mid-segment) commit,
+    retry, finish bitwise."""
+    key = jax.random.PRNGKey(1)
+    s0, h0 = driver.run_resumable(key, plane, cfg, ITERS, "reference",
+                                  checkpoint_dir=str(tmp_path / "plain"),
+                                  segment_iters=SEGMENT, record_every=RECORD)
+    inj = FaultInjector({RECORD: 1, SEGMENT + RECORD: 1})
+    sup = SegmentSupervisor(max_restarts=3, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    s1, h1 = sup.run_resumable(key, plane, cfg, ITERS, "reference",
+                               checkpoint_dir=str(tmp_path / "sup"),
+                               segment_iters=SEGMENT, record_every=RECORD,
+                               commit_every=RECORD, on_commit=inj)
+    assert inj.exhausted and sup.total_restarts == 2
+    assert sup.restarts == 1  # each kill followed committed progress
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+
+
+def test_replay_segment_verifies_committed_span(cfg, plane, tmp_path):
+    """The speculative re-execution primitive: replaying [start, end)
+    between two commits reproduces the committed end carry bitwise, and
+    un-replayable targets are refused with a reason, never an exception."""
+    key = jax.random.PRNGKey(1)
+    d = str(tmp_path / "ckpt")
+    driver.run_resumable(key, plane, cfg, ITERS, "reference",
+                         checkpoint_dir=d, segment_iters=SEGMENT,
+                         record_every=RECORD, commit_every=RECORD, keep=99)
+    rep = driver.replay_segment(key, plane, cfg, "reference",
+                                checkpoint_dir=d, segment_iters=SEGMENT,
+                                record_every=RECORD, step=6)
+    assert rep == {"replayed": True, "start": 4, "end": 6, "match": True}
+    rep = driver.replay_segment(key, plane, cfg, "reference",
+                                checkpoint_dir=d, segment_iters=SEGMENT,
+                                record_every=RECORD)  # default: latest
+    assert rep["end"] == ITERS and rep["match"] is True
+    first = committed_steps(d)[0]
+    rep = driver.replay_segment(key, plane, cfg, "reference",
+                                checkpoint_dir=d, segment_iters=SEGMENT,
+                                record_every=RECORD, step=first)
+    assert not rep["replayed"] and "predecessor" in rep["reason"]
+    rep = driver.replay_segment(key, plane, cfg, "reference",
+                                checkpoint_dir=str(tmp_path / "empty"),
+                                segment_iters=SEGMENT, record_every=RECORD)
+    assert not rep["replayed"] and "no committed" in rep["reason"]
+
+
+# ---------------------------------------------------------------------------
+# Streaming plane under preemption: the prefetch worker must not leak, the
+# stream cursor must stay correct through mid-segment commits.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stream_plane(cfg):
+    return make_data_plane(cfg, "streaming")
+
+
+def test_streaming_kill_leaves_no_prefetch_thread(cfg, stream_plane,
+                                                  tmp_path):
+    """Kill the run at the boundary where window e+1 is being placed (the
+    prefetcher is mid-flight): the driver's finally must close the worker
+    (no leaked "stream-prefetch" thread), the committed stamp must carry
+    the right stream_epoch, and the resume must be bitwise."""
+    key = jax.random.PRNGKey(8)
+    d = str(tmp_path / "ckpt")
+    inj = FaultInjector({2 * SEGMENT: 1})  # boundary: epoch 2's window is
+    with pytest.raises(Preemption):       # being prefetched right now
+        driver.run_resumable(key, stream_plane, cfg, ITERS, "reference",
+                             checkpoint_dir=d, segment_iters=SEGMENT,
+                             record_every=RECORD, on_segment=inj)
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("stream-prefetch")]
+    assert leaked == [], f"prefetch worker leaked through the kill: {leaked}"
+    step, extra = read_extra(d)
+    assert step == 2 * SEGMENT
+    assert extra["stream_epoch"] == 2  # the epoch the resume must re-enter
+    stats = {}
+    s_res, h_res = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                        "reference", checkpoint_dir=d,
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD,
+                                        stream_stats=stats)
+    s_full, h_full = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                          "reference",
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD)
+    assert h_res == h_full
+    np.testing.assert_array_equal(np.asarray(s_res.w), np.asarray(s_full.w))
+    assert stats  # the resumed run's prefetcher reported its counters
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("stream-prefetch")]
+    assert leaked == []  # clean shutdown on the successful path too
+
+
+def test_streaming_mid_segment_commit_resumes_bitwise(cfg, stream_plane,
+                                                      tmp_path):
+    """In-scan commits inside a streaming segment stamp the epoch of the
+    segment they are inside (done // segment_iters mid-segment), and a kill
+    at such a commit resumes bitwise — cursor and carry together."""
+    key = jax.random.PRNGKey(8)
+    d = str(tmp_path / "ckpt")
+    kill_at = SEGMENT + RECORD  # step 6, inside epoch-1's segment [4, 8)
+    inj = FaultInjector({kill_at: 1})
+    with pytest.raises(RuntimeError, match="injected fault"):
+        driver.run_resumable(key, stream_plane, cfg, ITERS, "reference",
+                             checkpoint_dir=d, segment_iters=SEGMENT,
+                             record_every=RECORD, commit_every=RECORD,
+                             on_commit=inj)
+    step, extra = read_extra(d)
+    assert step == kill_at
+    assert extra["stream_epoch"] == kill_at // SEGMENT == 1
+    s_res, h_res = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                        "reference", checkpoint_dir=d,
+                                        segment_iters=SEGMENT,
+                                        record_every=RECORD,
+                                        commit_every=RECORD)
+    s_full, h_full = driver.run_resumable(key, stream_plane, cfg, ITERS,
+                                          "reference",
+                                          checkpoint_dir=str(tmp_path / "c2"),
+                                          segment_iters=SEGMENT,
+                                          record_every=RECORD)
+    assert h_res == h_full
+    np.testing.assert_array_equal(np.asarray(s_res.w), np.asarray(s_full.w))
+
+
+def test_replay_segment_refuses_stream_window_crossing(cfg, stream_plane,
+                                                       tmp_path):
+    """A replay span that crosses a stream window boundary would need two
+    epochs' data in one dispatch — it must be refused, not mis-replayed."""
+    import shutil
+    key = jax.random.PRNGKey(8)
+    d = str(tmp_path / "ckpt")
+    driver.run_resumable(key, stream_plane, cfg, ITERS, "reference",
+                         checkpoint_dir=d, segment_iters=SEGMENT,
+                         record_every=RECORD, commit_every=RECORD, keep=99)
+    rep = driver.replay_segment(key, stream_plane, cfg, "reference",
+                                checkpoint_dir=d, segment_iters=SEGMENT,
+                                record_every=RECORD, step=6)
+    assert rep["replayed"] and rep["match"] is True  # [4, 6): inside epoch 1
+    # drop the step-4 commit so 6's predecessor becomes 2: [2, 6) spans
+    # epoch 0 -> 1
+    shutil.rmtree(f"{d}/step_{4:010d}")
+    rep = driver.replay_segment(key, stream_plane, cfg, "reference",
+                                checkpoint_dir=d, segment_iters=SEGMENT,
+                                record_every=RECORD, step=6)
+    assert not rep["replayed"] and "stream window" in rep["reason"]
+
+
+# ---------------------------------------------------------------------------
+# Grow-P elasticity (ISSUE 8 tentpole): capacity returns, regenerated bitwise.
+# ---------------------------------------------------------------------------
+def test_grown_plane_matches_fresh_larger_plane_bitwise(cfg, plane):
+    """The keystone property: tile keys fold only (p, q), so a regrown
+    partition IS the partition a fresh (new_P, Q) plane generates —
+    bitwise. Without this, grow-elasticity would silently change the
+    problem's data."""
+    from repro.data.plane import make_plane
+    grown = regrow_plane(plane, 2 * cfg.P)
+    assert isinstance(grown, GrownDataPlane)
+    assert (grown.P, grown.Q) == (2 * cfg.P, cfg.Q)
+    assert grown.N == 2 * cfg.N and grown.M == cfg.M
+    fresh = make_plane("tiled", jax.random.PRNGKey(0), 2 * cfg.N, cfg.M,
+                       2 * cfg.P, cfg.Q)
+    for p in range(2 * cfg.P):
+        for q in range(cfg.Q):
+            np.testing.assert_array_equal(np.asarray(grown.x_tile(p, q)),
+                                          np.asarray(fresh.x_tile(p, q)))
+        np.testing.assert_array_equal(np.asarray(grown.y_block(p)),
+                                      np.asarray(fresh.y_block(p)))
+
+
+def test_shrink_then_regrow_round_trips_bitwise(cfg, plane):
+    """shrink -> regrow is the identity on the data: survivors delegate
+    their generation key, so the regrown plane reproduces the original's
+    tiles (including a partition that was dropped in between)."""
+    regrown = regrow_plane(shrink_plane(plane, 1), cfg.P)
+    for p in range(cfg.P):
+        for q in range(cfg.Q):
+            np.testing.assert_array_equal(np.asarray(regrown.x_tile(p, q)),
+                                          np.asarray(plane.x_tile(p, q)))
+        np.testing.assert_array_equal(np.asarray(regrown.y_block(p)),
+                                      np.asarray(plane.y_block(p)))
+
+
+def test_grown_plane_rejections(cfg, plane):
+    with pytest.raises(ValueError, match="only grows"):
+        regrow_plane(plane, cfg.P)  # not a grow
+    with pytest.raises(TypeError, match="generation key"):
+        regrow_plane(make_data_plane(cfg, "dense"), 2 * cfg.P)
+    with pytest.raises(TypeError, match="streaming"):
+        regrow_plane(make_data_plane(cfg, "streaming"), 2 * cfg.P)
+    with pytest.raises(IndexError):
+        regrow_plane(plane, 2 * cfg.P).x_tile(2 * cfg.P, 0)
+
+
+def test_run_elastic_grow_round_trip_structure(cfg, plane, tmp_path):
+    """One call composes shrink at 4 and grow back at 8: three checkpoint
+    lineages, and the regrown directory never collides with the full-P one
+    even though regrow_P == cfg.P."""
+    import os
+    d = str(tmp_path / "e")
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+        checkpoint_dir=d, segment_iters=SEGMENT, lose_partition_at=SEGMENT,
+        regrow_at=2 * SEGMENT, record_every=RECORD, commit_every=RECORD)
+    assert [t for t, _ in hist] == list(range(0, ITERS + 1, RECORD))
+    assert int(s.t) == ITERS + 1
+    assert report["grow_cfg"].P == cfg.P
+    assert report["grown"].P == cfg.P
+    assert report["grow_plan"] == {0: [0], 1: []}
+    assert report["regrown_rows"] == cfg.n
+    assert sorted(n for n in os.listdir(d)) == ["P1", "P2", "P2-regrown"]
+    assert any(e.startswith(f"rescale@{2 * SEGMENT}:P1->P2")
+               for e in report["events"])
+
+
+def test_run_elastic_grow_deterministic_under_faults(cfg, plane, tmp_path):
+    """Kills in all three phases (full, shrunk, regrown) must not change
+    the elastic trajectory."""
+    key = jax.random.PRNGKey(1)
+
+    def go(sub, **kw):
+        return run_elastic(key, plane, cfg, ITERS, "reference",
+                           checkpoint_dir=str(tmp_path / sub),
+                           segment_iters=RECORD, lose_partition_at=SEGMENT,
+                           regrow_at=2 * SEGMENT, record_every=RECORD, **kw)
+
+    s0, h0, _ = go("clean")
+    # one kill per phase: 2 (full grid), 6 (shrunk), 8 (regrown phase's
+    # first segment start)
+    inj = FaultInjector({RECORD: 1, SEGMENT + RECORD: 1, 2 * SEGMENT: 1})
+    sup = SegmentSupervisor(max_restarts=2, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    s1, h1, _ = go("faulty", on_segment_start=inj, supervisor=sup)
+    assert inj.exhausted and sup.total_restarts == 3
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+
+
+def test_run_elastic_grow_converges_to_regrown_optimum(cfg, tmp_path):
+    """Acceptance criterion: after the shrink->grow round-trip the problem
+    is the original data again (regrown tiles are bitwise the originals),
+    so the final objective must land in the from-scratch full-P run's
+    neighbourhood under STALENESS."""
+    plane = make_data_plane(cfg, "tiled")
+    iters = 30
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(2), plane, cfg, iters, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=5,
+        lose_partition_at=5, regrow_at=10, record_every=5)
+    _, h_ref = driver.run(jax.random.PRNGKey(2), plane, cfg, iters,
+                          "reference", record_every=5)
+    assert_objectives_close(h_ref[-1][1], hist[-1][1], STALENESS,
+                            context="elastic shrink->grow vs from-scratch")
+    assert hist[-1][1] < dict(hist)[10]  # still descending after the grow
+
+
+def test_run_elastic_grow_shard_map_backend(cfg, plane, tmp_path):
+    """Mesh backends rebuild the mesh in both directions; the regrown
+    phase gets a fresh (regrow_P, Q) mesh."""
+    s, hist, report = run_elastic(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "shard_map",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=SEGMENT,
+        lose_partition_at=SEGMENT, regrow_at=2 * SEGMENT,
+        record_every=RECORD, mesh=sodda_test_mesh(cfg))
+    assert int(s.t) == ITERS + 1
+    assert [t for t, _ in hist] == list(range(0, ITERS + 1, RECORD))
+    assert report["grow_cfg"].P == cfg.P
+
+
+def test_run_elastic_grow_validations(cfg, plane, tmp_path):
+    key = jax.random.PRNGKey(1)
+    d = str(tmp_path / "e")
+
+    def go(**kw):
+        return run_elastic(key, plane, cfg, ITERS, checkpoint_dir=d,
+                           segment_iters=SEGMENT,
+                           lose_partition_at=SEGMENT, **kw)
+
+    with pytest.raises(ValueError, match="regrow_at must be inside"):
+        go(regrow_at=SEGMENT)  # not after the loss
+    with pytest.raises(ValueError, match="regrow_at must be inside"):
+        go(regrow_at=ITERS)
+    with pytest.raises(ValueError, match="segment boundary"):
+        go(regrow_at=SEGMENT + 1)
+    with pytest.raises(ValueError, match="regrow_P must exceed"):
+        go(regrow_at=2 * SEGMENT, regrow_P=1)
+    with pytest.raises(ValueError, match="regrow_P without regrow_at"):
+        go(regrow_P=cfg.P)
+    with pytest.raises(ValueError, match="shrinks the grid"):
+        go(new_P=cfg.P + 1)  # the loss direction cannot grow
+
+
+# ---------------------------------------------------------------------------
+# Straggler response: patience -> rescale / speculate, deterministic under
+# the fake clock.
+# ---------------------------------------------------------------------------
+def _response_sup(clock, action, patience=2, **kw):
+    return SegmentSupervisor(
+        straggler=StragglerPolicy(window=8, warmup=1, z_threshold=1.0),
+        straggler_patience=patience, straggler_action=action,
+        sleep=SleepRecorder(clock), clock=clock, **kw)
+
+
+def test_straggler_response_config_validation():
+    with pytest.raises(ValueError, match="straggler_action"):
+        SegmentSupervisor(straggler_action="panic")
+    with pytest.raises(ValueError, match="straggler_patience"):
+        SegmentSupervisor(straggler_patience=-1)
+    with pytest.raises(ValueError, match="ever fire"):
+        SegmentSupervisor(straggler_action="rescale")  # patience defaults 0
+
+
+def test_straggler_streak_resets_on_normal_segment(cfg, plane, tmp_path):
+    """Two flagged segments separated by normal ones must NOT trigger a
+    patience=2 response: the streak is consecutive, not cumulative."""
+    clock = FakeClock()
+    responses = []
+    # segments [2,4) and [8,10) read slow; [4,6) and [6,8) are normal
+    adv = ClockAdvancer(clock, {RECORD: 50.0, 4 * RECORD: 5000.0})
+    sup = _response_sup(clock, None,
+                        on_straggler_response=lambda *a: responses.append(a))
+    sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+                      checkpoint_dir=str(tmp_path / "c"),
+                      segment_iters=RECORD, record_every=RECORD,
+                      on_segment_start=adv)
+    assert sum(1 for e in sup.events if e.startswith("straggler@")) == 2
+    assert responses == []  # the streak broke in between
+    assert not any("straggler-response" in e for e in sup.events)
+
+
+def test_straggler_response_rescale_is_deterministic(cfg, plane, tmp_path):
+    """Two identical runs under the fake clock raise StragglerRescale at
+    the same committed boundary with the same streak, and leave identical
+    event logs — the decision is a pure function of the injected timings."""
+    def go(sub):
+        clock = FakeClock()
+        adv = ClockAdvancer(clock, {RECORD: 50.0, 2 * RECORD: 500.0})
+        sup = _response_sup(clock, "rescale")
+        with pytest.raises(StragglerRescale) as exc:
+            sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                              "reference",
+                              checkpoint_dir=str(tmp_path / sub),
+                              segment_iters=RECORD, record_every=RECORD,
+                              on_segment_start=adv)
+        return exc.value, list(sup.events)
+
+    sig1, ev1 = go("a")
+    sig2, ev2 = go("b")
+    assert (sig1.iters_done, sig1.streak) == (3 * RECORD, 2)
+    assert (sig2.iters_done, sig2.streak) == (3 * RECORD, 2)
+    assert ev1 == ev2
+    assert f"straggler-response@{3 * RECORD}:rescale(streak=2)" in ev1
+
+
+def test_straggler_response_speculate_confirms_commit(cfg, plane, tmp_path):
+    """The speculate action replays the flagged span against its commit and
+    records the bitwise verdict; a confirmed replay lets the run finish on
+    the normal trajectory."""
+    clock = FakeClock()
+    adv = ClockAdvancer(clock, {RECORD: 50.0, 2 * RECORD: 500.0})
+    sup = _response_sup(clock, "speculate")
+    s1, h1 = sup.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                               "reference",
+                               checkpoint_dir=str(tmp_path / "spec"),
+                               segment_iters=RECORD, record_every=RECORD,
+                               commit_every=RECORD, on_segment_start=adv)
+    spec = [e for e in sup.events if e.startswith("speculate@")]
+    assert spec == [f"speculate@{3 * RECORD}:[{2 * RECORD},{3 * RECORD}] "
+                    "match=True"]
+    s0, h0 = driver.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                                  "reference",
+                                  checkpoint_dir=str(tmp_path / "plain"),
+                                  segment_iters=RECORD, record_every=RECORD)
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+
+
+def test_run_elastic_auto_shrinks_at_straggler_boundary(cfg, plane,
+                                                        tmp_path):
+    """The closed loop: planted slow segments trigger the rescale response,
+    the run restores the committed boundary, shrinks, and finishes on the
+    surviving data — deterministically."""
+    clock = FakeClock()
+    adv = ClockAdvancer(clock, {RECORD: 50.0, 2 * RECORD: 500.0})
+    sup = _response_sup(clock, "rescale")
+    s, hist, report = run_elastic_auto(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=RECORD,
+        record_every=RECORD, supervisor=sup, on_segment_start=adv)
+    assert report["rescaled"] is True
+    assert report["boundary"] == 3 * RECORD
+    assert report["new_cfg"].P == cfg.P - 1
+    assert [t for t, _ in hist] == list(range(0, ITERS + 1, RECORD))
+    assert int(s.t) == ITERS + 1
+    assert any(e.startswith(f"rescale@{3 * RECORD}:P{cfg.P}->P{cfg.P - 1}")
+               for e in report["events"])
+
+
+def test_run_elastic_auto_without_stragglers_never_rescales(cfg, plane,
+                                                            tmp_path):
+    """No planted slowness: the run must complete on the full grid, bitwise
+    equal to an unsupervised run, and report rescaled=False."""
+    s0, h0 = driver.run_resumable(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                                  "reference",
+                                  checkpoint_dir=str(tmp_path / "plain"),
+                                  segment_iters=SEGMENT, record_every=RECORD)
+    s1, h1, report = run_elastic_auto(
+        jax.random.PRNGKey(1), plane, cfg, ITERS, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=SEGMENT,
+        record_every=RECORD, supervisor=_response_sup(FakeClock(), "rescale"))
+    assert report["rescaled"] is False
+    assert h0 == h1
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(s1.w))
+
+
+def test_run_elastic_auto_converges_to_shrunk_optimum(cfg, tmp_path):
+    """Same-optimum acceptance for the auto path: the post-response phase
+    is the shrunk problem, held to STALENESS against a from-scratch run on
+    the surviving data."""
+    plane = make_data_plane(cfg, "tiled")
+    iters = 30
+    clock = FakeClock()
+    adv = ClockAdvancer(clock, {5: 50.0, 10: 500.0})
+    sup = _response_sup(clock, "rescale")
+    s, hist, report = run_elastic_auto(
+        jax.random.PRNGKey(2), plane, cfg, iters, "reference",
+        checkpoint_dir=str(tmp_path / "e"), segment_iters=5, record_every=5,
+        supervisor=sup, on_segment_start=adv)
+    assert report["rescaled"] and report["boundary"] == 15
+    _, h_ref = driver.run(jax.random.PRNGKey(2),
+                          shrink_plane(plane, cfg.P - 1),
+                          report["new_cfg"], iters, "reference",
+                          record_every=5)
+    assert_objectives_close(h_ref[-1][1], hist[-1][1], STALENESS,
+                            context="auto shrink-P vs from-scratch")
+
+
+def test_run_elastic_auto_validates_supervisor(cfg, plane, tmp_path):
+    with pytest.raises(ValueError, match="straggler_action='rescale'"):
+        run_elastic_auto(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                         checkpoint_dir=str(tmp_path / "e"),
+                         segment_iters=SEGMENT,
+                         supervisor=SegmentSupervisor())
+    with pytest.raises(ValueError, match="shrinks the grid"):
+        run_elastic_auto(jax.random.PRNGKey(1), plane, cfg, ITERS,
+                         checkpoint_dir=str(tmp_path / "e"),
+                         segment_iters=SEGMENT, new_P=cfg.P)
+
+
+# ---------------------------------------------------------------------------
+# Property-style invariants, hypothesis-free fallbacks (the hypothesis suite
+# in test_fault_property.py covers the same invariants with generated data
+# when the library is available).
+# ---------------------------------------------------------------------------
+def test_backoff_delay_monotone_and_capped():
+    sup = SegmentSupervisor(backoff_base_s=0.05, backoff_max_s=1.0,
+                            sleep=SleepRecorder(), clock=FakeClock())
+    delays = [sup.backoff_delay(a) for a in range(1, 16)]
+    assert delays[0] == pytest.approx(0.05)
+    assert all(b >= a for a, b in zip(delays, delays[1:]))  # monotone
+    assert max(delays) == 1.0  # capped
+    with pytest.raises(ValueError, match="1-based"):
+        sup.backoff_delay(0)
+
+
+def test_note_failure_budget_resets_exactly_on_strictly_newer():
+    """The consecutive-budget contract, exercised directly: only a commit
+    strictly newer than the previous failure saw resets the counter —
+    repeats of the same committed step do not."""
+    sup = SegmentSupervisor(max_restarts=2, sleep=SleepRecorder(),
+                            clock=FakeClock())
+    assert sup.note_failure(None) is not None   # 1st consecutive
+    assert sup.note_failure(None) is not None   # 2nd
+    assert sup.note_failure(4) is not None      # progress (None -> 4): reset
+    assert sup.restarts == 1
+    assert sup.note_failure(4) is not None      # same step: no reset (2nd)
+    assert sup.note_failure(4) is None          # 3rd > max_restarts=2
+    assert sup.total_restarts == 5
+
+
+def test_straggler_p50_is_trailing_window_median():
+    sp = StragglerPolicy(window=4, warmup=1)
+    for d in (1.0, 2.0, 3.0, 4.0, 5.0, 6.0):
+        sp.record(d)
+    assert len(sp._durations) == 4
+    assert sp.p50 == pytest.approx(np.median([3.0, 4.0, 5.0, 6.0]))
