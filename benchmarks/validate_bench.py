@@ -16,6 +16,12 @@ rely on the shape without re-deriving it from the writer.
     # ...and/or the supervision-overhead cell:
     PYTHONPATH=src python -m benchmarks.validate_bench \
         results/BENCH_sodda.json --require-supervision
+    # ...and/or the kernel-autotuning cell:
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        results/BENCH_sodda.json --require-tuning
+    # validate the per-PR bench trajectory instead (bench_history/v1 JSONL):
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        --history results/BENCH_history.jsonl
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import json
 import sys
 
 SCHEMA = "bench_sodda/v1"
+HISTORY_SCHEMA = "bench_history/v1"
 
 _PROBLEM_KEYS = {"name": str, "P": int, "Q": int, "N": int, "M": int,
                  "L": int, "loss": str}
@@ -119,6 +126,9 @@ def validate(payload: dict) -> dict:
     sup = payload.get("supervision")
     if sup is not None:
         _check_supervision(sup)
+    tn = payload.get("tuning")
+    if tn is not None:
+        _check_tuning(tn)
     return payload
 
 
@@ -287,10 +297,126 @@ def _check_supervision(sup):
               f"supervised-small/supervised-0 ({implied})")
 
 
+def _check_tuning(tn):
+    """The optional kernel-autotuning cell (bench_tuning).
+
+    Records the `BlockConfig` the autotuner picked for the bench shape vs
+    the single-tile default and their measured us ratio. The cell takes
+    the better of the two by construction (the autotuner's no-regression
+    anchor), so `tuned_vs_default_us_ratio` must be ≤ 1.0 — the PR's
+    acceptance criterion, not a soft target.
+    """
+    ctx = "tuning"
+    if not isinstance(tn, dict):
+        _fail(f"{ctx}: must be an object")
+    if not isinstance(tn.get("loss"), str):
+        _fail(f"{ctx}.loss must be a string, got {tn.get('loss')!r}")
+    for k in ("B", "L", "mt"):
+        v = tn.get(k)
+        if not isinstance(v, int) or v < 1:
+            _fail(f"{ctx}.{k} must be a positive int, got {v!r}")
+    if not isinstance(tn.get("platform"), str):
+        _fail(f"{ctx}.platform must be a string, got {tn.get('platform')!r}")
+    if not isinstance(tn.get("interpret"), bool):
+        _fail(f"{ctx}.interpret must be a bool, got {tn.get('interpret')!r}")
+    for k in ("default_config", "tuned_config"):
+        c = tn.get(k)
+        if not isinstance(c, dict) or not isinstance(c.get("block_l"), int) \
+                or c["block_l"] < 1:
+            _fail(f"{ctx}.{k} must be a BlockConfig object with a positive "
+                  f"int block_l, got {c!r}")
+    for k in ("default_us", "tuned_us"):
+        v = tn.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            _fail(f"{ctx}.{k} must be positive, got {v!r}")
+    r = tn.get("tuned_vs_default_us_ratio")
+    if not isinstance(r, (int, float)) or r <= 0:
+        _fail(f"{ctx}.tuned_vs_default_us_ratio must be positive, got {r!r}")
+    implied = tn["tuned_us"] / tn["default_us"]
+    if abs(r - implied) > 1e-6 * implied:
+        _fail(f"{ctx}.tuned_vs_default_us_ratio ({r}) is not "
+              f"tuned/default ({implied})")
+    if r > 1.0:
+        _fail(f"{ctx}.tuned_vs_default_us_ratio must be <= 1.0 (the "
+              f"autotuner never regresses the default), got {r!r}")
+
+
+def validate_history_entry(entry, prev_seq=None, ctx="history"):
+    """Validate one bench_history/v1 entry; returns its seq."""
+    if not isinstance(entry, dict):
+        _fail(f"{ctx}: entry must be a JSON object, got {type(entry).__name__}")
+    if entry.get("schema") != HISTORY_SCHEMA:
+        _fail(f"{ctx}: schema must be {HISTORY_SCHEMA!r}, "
+              f"got {entry.get('schema')!r}")
+    seq = entry.get("seq")
+    if not isinstance(seq, int) or seq < 1:
+        _fail(f"{ctx}: seq must be a positive int, got {seq!r}")
+    if prev_seq is not None and seq <= prev_seq:
+        _fail(f"{ctx}: seq {seq} is out of order (previous entry was "
+              f"{prev_seq}; the trajectory must be strictly ascending)")
+    if not isinstance(entry.get("label"), str) or not entry["label"]:
+        _fail(f"{ctx}: label must be a non-empty string, "
+              f"got {entry.get('label')!r}")
+    if not isinstance(entry.get("date"), str):
+        _fail(f"{ctx}: date must be a string, got {entry.get('date')!r}")
+    problem = entry.get("problem")
+    if not isinstance(problem, dict):
+        _fail(f"{ctx}: missing 'problem' object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"{ctx}: problem.{k} must be {ty.__name__}, "
+                  f"got {problem.get(k)!r}")
+    it = entry.get("iters")
+    if not isinstance(it, int) or it < 1:
+        _fail(f"{ctx}: iters must be a positive int, got {it!r}")
+    backends = entry.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        _fail(f"{ctx}: backends must be a non-empty object")
+    for name, us in backends.items():
+        if not isinstance(name, str) or not isinstance(us, (int, float)) \
+                or us <= 0:
+            _fail(f"{ctx}: backends[{name!r}] must be a positive us/iter "
+                  f"number, got {us!r}")
+    tn = entry.get("tuning")
+    if tn is not None:
+        r = tn.get("tuned_vs_default_us_ratio") if isinstance(tn, dict) \
+            else None
+        if not isinstance(r, (int, float)) or not 0 < r <= 1.0:
+            _fail(f"{ctx}: tuning.tuned_vs_default_us_ratio must be in "
+                  f"(0, 1], got {tn!r}")
+    return seq
+
+
+def validate_history(text: str) -> list:
+    """Validate a bench_history/v1 JSONL trajectory; returns the entries.
+
+    Rejects malformed lines, wrong-schema entries, and out-of-order `seq`
+    values — the committed trajectory is append-only and strictly ordered,
+    so a merge that shuffles it fails loudly.
+    """
+    entries, prev_seq = [], None
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        _fail("history: no entries (an empty trajectory gates nothing)")
+    for i, line in enumerate(lines, 1):
+        try:
+            entry = json.loads(line)
+        except ValueError as e:
+            _fail(f"history line {i}: not valid JSON ({e})")
+        prev_seq = validate_history_entry(entry, prev_seq,
+                                          ctx=f"history line {i}")
+        entries.append(entry)
+    return entries
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    if any(a in ("--help", "-h") for a in argv):
+        print(__doc__)
+        return 0
     paths, required = [], []
-    require_streaming = require_supervision = False
+    require_streaming = require_supervision = require_tuning = False
+    history_mode = False
     it = iter(argv)
     for a in it:
         if a == "--require-backend":
@@ -299,11 +425,25 @@ def main(argv=None) -> int:
             require_streaming = True
         elif a == "--require-supervision":
             require_supervision = True
+        elif a == "--require-tuning":
+            require_tuning = True
+        elif a == "--history":
+            history_mode = True
         else:
             paths.append(a)
     if len(paths) != 1 or None in required:
         print(__doc__)
         return 2
+    if history_mode:
+        if required or require_streaming or require_supervision \
+                or require_tuning:
+            print(__doc__)
+            return 2
+        with open(paths[0]) as f:
+            entries = validate_history(f.read())
+        print(f"OK {paths[0]}: schema={HISTORY_SCHEMA} entries={len(entries)} "
+              f"seq={entries[0]['seq']}..{entries[-1]['seq']}")
+        return 0
     with open(paths[0]) as f:
         payload = validate(json.load(f))
     missing = [b for b in required if b not in payload["backends"]]
@@ -318,6 +458,10 @@ def main(argv=None) -> int:
     if require_supervision and payload.get("supervision") is None:
         print(f"FAIL {paths[0]}: required supervision cell missing "
               "(run benchmarks.run --only supervision to produce it)")
+        return 1
+    if require_tuning and payload.get("tuning") is None:
+        print(f"FAIL {paths[0]}: required tuning cell missing "
+              "(run benchmarks.run --only tuning to produce it)")
         return 1
     n = len(payload["backends"])
     ref = payload["backends"].get("reference", {})

@@ -52,7 +52,7 @@ def data_shardings(mesh):
 
 def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
                       compress_mu: bool = False, compress_z: bool = False,
-                      use_kernel: bool = False):
+                      use_kernel: bool = False, block_l=None):
     """The per-device *issue*/*consume* halves of one outer iteration.
 
     ``issue_local`` performs paper steps 5-8: sample B/C/D, reduce the
@@ -132,7 +132,8 @@ def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
         if use_kernel:
             from repro.kernels import ops as kops  # local import: optional dep
             wL = kops.sodda_inner(w0[None], Xl[None], yl[None], mu_blk[None],
-                                  gamma, cfg.loss, force="pallas")[0]
+                                  gamma, cfg.loss, force="pallas",
+                                  block_l=block_l)[0]
         else:
             wL = inner_loop(cfg.loss, w0, Xl, yl, mu_blk, gamma)
 
@@ -155,7 +156,7 @@ def make_local_halves(cfg: SoddaConfig, gather_deltas: bool = True,
 
 def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
                           compress_mu: bool = False, compress_z: bool = False,
-                          use_kernel: bool = False):
+                          use_kernel: bool = False, block_l=None):
     """Build the jitted shard_map SODDA step for `mesh` (data=P, model=Q).
 
     The step composes the :func:`make_local_halves` pair synchronously:
@@ -180,7 +181,7 @@ def make_distributed_step(mesh, cfg: SoddaConfig, gather_deltas: bool = True,
     assert (Pn, Qn) == (cfg.P, cfg.Q), (mesh.shape, cfg)
     issue_local, consume_local = make_local_halves(
         cfg, gather_deltas=gather_deltas, compress_mu=compress_mu,
-        compress_z=compress_z, use_kernel=use_kernel)
+        compress_z=compress_z, use_kernel=use_kernel, block_l=block_l)
 
     def step_local(X_loc, y_loc, w_loc, t, key):
         mu_q = issue_local(X_loc, y_loc, w_loc, t, key)

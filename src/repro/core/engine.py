@@ -30,9 +30,11 @@ strategy (``gather_deltas``), int8 wire compression of the two dominant
 collectives (``compress_z``, ``compress_mu``) — meaningful only for the
 distributed backends — and ``staleness`` (0 or 1), meaningful only for the
 stale-by-one backends (``async``/``async-mesh``; the synchronous mesh
-backends still reject it). All are rejected with ``ValueError`` on backends
-they cannot affect, so a silent no-op can never masquerade as a measured
-ablation.
+backends still reject it) — and ``block_l``, the Pallas inner kernel's
+L-tiling schedule (``repro.kernels.tuning``), meaningful only for the
+kernel backends (``pallas``/``shard_map+pallas``). All are rejected with
+``ValueError`` on backends they cannot affect, so a silent no-op can never
+masquerade as a measured ablation.
 
 Every step function returned by :func:`make_step` has the uniform signature
 ``step(carry, X, y) -> carry``. For most backends the carry IS the plain
@@ -100,6 +102,10 @@ class EngineOptions:
     compress_mu: bool = False
     compress_z: bool = False
     staleness: Optional[int] = None  # async/async-mesh only; None = default
+    # L-tiling schedule of the Pallas inner kernel (tuning.BlockConfig.block_l).
+    # Meaningful only for the kernel backends ('pallas', 'shard_map+pallas');
+    # None = the single-tile default. Pick with repro.kernels.tuning.autotune.
+    block_l: Optional[int] = None
 
     @property
     def distributed_kwargs(self):
@@ -126,6 +132,13 @@ class EngineOptions:
                 f"backend {backend!r} exchanges synchronously; staleness is "
                 "only meaningful for the stale-by-one backends "
                 "('async', 'async-mesh')")
+
+    def require_no_kernel(self, backend: str):
+        if self.block_l is not None:
+            raise ValueError(
+                f"backend {backend!r} does not run the Pallas inner kernel; "
+                "block_l only tunes the kernel backends "
+                "('pallas', 'shard_map+pallas')")
 
     def resolve_staleness(self) -> int:
         """The effective staleness of a stale-by-one backend (default 1)."""
@@ -240,6 +253,7 @@ def _resolve_mesh(cfg: SoddaConfig, opts: EngineOptions):
 def _reference(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     opts.require_no_wires("reference")
     opts.require_synchronous("reference")
+    opts.require_no_kernel("reference")
 
     def step(state, X, y):
         return sodda.sodda_step(state, X, y, cfg, use_kernel=False)
@@ -251,9 +265,11 @@ def _reference(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
 def _pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     opts.require_no_wires("pallas")
     opts.require_synchronous("pallas")
+    block_l = opts.block_l
 
     def step(state, X, y):
-        return sodda.sodda_step(state, X, y, cfg, use_kernel=True)
+        return sodda.sodda_step(state, X, y, cfg, use_kernel=True,
+                                block_l=block_l)
 
     return step
 
@@ -262,6 +278,7 @@ def _pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
 def _shard_map(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     from repro.core.distributed import make_distributed_step
     opts.require_synchronous("shard_map")
+    opts.require_no_kernel("shard_map")
     return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
                                  **opts.distributed_kwargs)
 
@@ -271,7 +288,8 @@ def _shard_map_pallas(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     from repro.core.distributed import make_distributed_step
     opts.require_synchronous("shard_map+pallas")
     return make_distributed_step(_resolve_mesh(cfg, opts), cfg,
-                                 use_kernel=True, **opts.distributed_kwargs)
+                                 use_kernel=True, block_l=opts.block_l,
+                                 **opts.distributed_kwargs)
 
 
 @register_backend("radisa-avg")
@@ -280,6 +298,7 @@ def _radisa_avg(cfg: SoddaConfig, opts: EngineOptions) -> StepFn:
     every driver/benchmark runs baselines and SODDA through one code path."""
     opts.require_no_wires("radisa-avg")
     opts.require_synchronous("radisa-avg")
+    opts.require_no_kernel("radisa-avg")
     from repro.core import radisa
 
     def step(state, X, y):
@@ -302,6 +321,7 @@ def _async(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
     synchronous schedule — the exact-parity anchor of the conformance suite.
     """
     opts.require_no_wires("async")
+    opts.require_no_kernel("async")
     staleness = opts.resolve_staleness()
 
     def step(carry, X, y):
@@ -329,6 +349,7 @@ def _async_mesh(cfg: SoddaConfig, opts: EngineOptions) -> StepBundle:
     the BITWISE conformance anchor against that backend.
     """
     from repro.core.distributed import make_distributed_async_step
+    opts.require_no_kernel("async-mesh")
     return make_distributed_async_step(
         _resolve_mesh(cfg, opts), cfg, staleness=opts.resolve_staleness(),
         **opts.distributed_kwargs)
@@ -347,8 +368,8 @@ MESH_BACKENDS = ("shard_map", "shard_map+pallas", "async-mesh")
 # ---------------------------------------------------------------------------
 def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
                 gather_deltas: bool = True, compress_mu: bool = False,
-                compress_z: bool = False,
-                staleness: Optional[int] = None) -> StepBundle:
+                compress_z: bool = False, staleness: Optional[int] = None,
+                block_l: Optional[int] = None) -> StepBundle:
     """Build the full :class:`StepBundle` (step + carry protocol) for `backend`.
 
     This is what the scan driver composes: ``place_data`` (DataPlane ->
@@ -369,7 +390,7 @@ def make_bundle(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
         mesh = make_mesh_for(cfg)
     opts = EngineOptions(mesh=mesh, gather_deltas=gather_deltas,
                          compress_mu=compress_mu, compress_z=compress_z,
-                         staleness=staleness)
+                         staleness=staleness, block_l=block_l)
     bundle = _as_bundle(factory(cfg, opts))
     if bundle.place_data is None:
         data_mesh = opts.mesh if backend in MESH_BACKENDS else None
@@ -411,7 +432,8 @@ def rescale_bundle(cfg: SoddaConfig, backend: str, new_P: int, **options):
 
 def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
               gather_deltas: bool = True, compress_mu: bool = False,
-              compress_z: bool = False, staleness: Optional[int] = None) -> StepFn:
+              compress_z: bool = False, staleness: Optional[int] = None,
+              block_l: Optional[int] = None) -> StepFn:
     """Build a SODDA step ``(carry, X, y) -> carry`` for `backend`.
 
     For plain backends the carry is the ``SoddaState``; for extended-carry
@@ -420,7 +442,7 @@ def make_step(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,
     """
     return make_bundle(cfg, backend, mesh=mesh, gather_deltas=gather_deltas,
                        compress_mu=compress_mu, compress_z=compress_z,
-                       staleness=staleness).step
+                       staleness=staleness, block_l=block_l).step
 
 
 def make_objective(cfg: SoddaConfig, backend: str = "reference", *, mesh=None,

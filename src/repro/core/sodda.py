@@ -125,7 +125,8 @@ def _issue(cfg: SoddaConfig, X, y, w, t, key):
 
 
 def consume_update(X, y, w, mu, smp: IterationSample, gamma,
-                   cfg: SoddaConfig, use_kernel: bool = False):
+                   cfg: SoddaConfig, use_kernel: bool = False,
+                   block_l=None):
     """Steps 10-19 — the *consume* half of an outer iteration.
 
     Gathers the per-(p, q) working sets for the iteration's sample, runs the
@@ -159,7 +160,8 @@ def consume_update(X, y, w, mu, smp: IterationSample, gamma,
         wL = kops.sodda_inner(
             w0.reshape(P * Q, mt), Xl.reshape(P * Q, L, mt),
             yl.reshape(P * Q, L), mu_blk.reshape(P * Q, mt),
-            gamma, cfg.loss, force="pallas").reshape(P, Q, mt)
+            gamma, cfg.loss, force="pallas",
+            block_l=block_l).reshape(P, Q, mt)
     else:
         wL = jax.vmap(jax.vmap(
             lambda w_, X_, y_, m_: inner_loop(cfg.loss, w_, X_, y_, m_, gamma)
@@ -172,11 +174,13 @@ def consume_update(X, y, w, mu, smp: IterationSample, gamma,
     return new_wb.reshape(M)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
-def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig, use_kernel: bool = False):
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "block_l"))
+def sodda_step(state: SoddaState, X, y, cfg: SoddaConfig,
+               use_kernel: bool = False, block_l=None):
     gamma = _gamma(cfg, state.t)
     smp, mu = _issue(cfg, X, y, state.w, state.t, state.key)
-    w_new = consume_update(X, y, state.w, mu, smp, gamma, cfg, use_kernel)
+    w_new = consume_update(X, y, state.w, mu, smp, gamma, cfg, use_kernel,
+                           block_l=block_l)
     return SoddaState(w=w_new, t=state.t + 1, key=state.key)
 
 

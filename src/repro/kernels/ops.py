@@ -33,9 +33,16 @@ def _pad_axis(x, axis: int, mult: int):
 
 
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("loss", "force"))
-def sodda_inner(w0, Xl, yl, mu, gamma, loss: str = "hinge", force: str = "auto"):
-    """Batched SODDA inner loop. w0 (B,mt), Xl (B,L,mt), yl (B,L), mu (B,mt)."""
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "force", "block_l", "interpret"))
+def sodda_inner(w0, Xl, yl, mu, gamma, loss: str = "hinge",
+                force: str = "auto", block_l=None, interpret=None):
+    """Batched SODDA inner loop. w0 (B,mt), Xl (B,L,mt), yl (B,L), mu (B,mt).
+
+    `block_l` is the L-tiling schedule (`tuning.BlockConfig.block_l`;
+    None = single tile). `interpret=None` derives from `repro.platform`
+    inside `sodda_inner_pallas` — it is threaded, never pinned here.
+    """
     use_kernel = force == "pallas" or (force == "auto" and _on_tpu())
     if not use_kernel:
         return ref.sodda_inner_ref(w0, Xl, yl, mu, gamma, loss)
@@ -44,7 +51,7 @@ def sodda_inner(w0, Xl, yl, mu, gamma, loss: str = "hinge", force: str = "auto")
     Xlp, _ = _pad_axis(Xl, 2, 128)
     mup, _ = _pad_axis(mu, 1, 128)
     out = sodda_inner_pallas(w0p, Xlp, yl, mup, gamma, loss,
-                             interpret=not _on_tpu())
+                             interpret=interpret, block_l=block_l)
     return out[:, :mt]
 
 

@@ -4,13 +4,27 @@ The inner loop is a length-L sequential chain of rank-1 SVRG-corrected
 updates on an m_tilde-sized parameter sub-block. It is latency-critical
 (sequential dependence, two m_tilde-dot-products + one axpy per step) and the
 natural TPU mapping is: pin wbar, w0, mu (3 * mt floats) in VMEM for the whole
-chain, pre-compute the L snapshot margins z0 = Xl @ w0 with ONE MXU matvec
+chain, pre-compute the snapshot margins z0 = Xl @ w0 with ONE MXU matvec
 (the reference recomputes x.w0 every step — the kernel hoists it, which is
 exact because w0 is loop-invariant), then stream the L rows from VMEM.
 
-Grid: one program per (p, q) block — all P*Q blocks are independent.
-VMEM budget per program: (L + 3) * mt * 4B  (+ L * 4B margins); with the
-paper's sizes (mt <= 2048 after padding, L <= 512) this is < 4.5 MB.
+Grid: ``(B, L // block_l)`` — one program chain per (p, q) block (all P*Q
+blocks are independent), tiled over the L dimension by a tunable
+``BlockConfig.block_l`` (see `repro.kernels.tuning`). The output block's
+index map ignores the tile axis, so the running ``wbar`` stays resident in
+VMEM across a block's whole tile chain (TPU grids run sequentially,
+innermost axis fastest; the block is written back to HBM once per b) while
+Pallas double-buffers the streamed ``(block_l, mt)`` X tiles underneath the
+compute. The hoisted-matvec trick tiles exactly: each row's margin is an
+independent dot product, so computing z0 per tile is bitwise-identical to
+one full-L matvec, and the sequential chain itself is untouched — every
+legal ``block_l`` produces bitwise-identical results (the conformance
+anchor in tests/test_kernels.py).
+
+VMEM budget per program: ``(2*block_l + 3) * mt * 4B (+ 4*block_l * 4B)``
+— the doubled term is the double-buffered X stream. Legality (budget +
+lane alignment + divisibility) is checked by `tuning.validate_config`;
+`block_l=None` means one tile (`block_l = L`), the seed kernel's shape.
 
 Alignment: mt must be a multiple of 128 (lane width) — `ops.sodda_inner`
 zero-pads; zero columns are exact no-ops for every supported loss because
@@ -19,24 +33,35 @@ g = (l'(z1,y) - l'(z0,y)) * x + mu vanishes coordinate-wise where x = mu = 0.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import losses
+from repro import platform as repro_platform
 
 
-def _kernel(w0_ref, x_ref, y_ref, mu_ref, gamma_ref, out_ref, *, L: int, loss: str):
+def _kernel(w0_ref, x_ref, y_ref, mu_ref, gamma_ref, out_ref, *,
+            block_l: int, loss: str):
     deriv = functools.partial(losses.loss_deriv, loss)
-    w0 = w0_ref[0]  # (mt,)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():  # first tile of this block's chain: seed wbar with w0
+        out_ref[0] = w0_ref[0]
+
+    w0 = w0_ref[0]  # (mt,) — loop-invariant snapshot
     mu = mu_ref[0]  # (mt,)
-    X = x_ref[0]  # (L, mt)
-    yv = y_ref[0]  # (L,)
+    X = x_ref[0]  # (block_l, mt) — the streamed tile
+    yv = y_ref[0]  # (block_l,)
     gamma = gamma_ref[0]
-    # hoisted snapshot margins: one matvec on the MXU instead of L VPU dots
-    z0 = X @ w0  # (L,)
-    d0 = deriv(z0, yv)  # (L,) — loop-invariant
+    # hoisted snapshot margins: one matvec on the MXU instead of block_l
+    # VPU dots; per-tile hoisting is bitwise-equal to the full-L matvec
+    # because each row's dot is independent
+    z0 = X @ w0  # (block_l,)
+    d0 = deriv(z0, yv)  # (block_l,) — loop-invariant within the tile
 
     def step(i, wbar):
         x = X[i]
@@ -44,26 +69,41 @@ def _kernel(w0_ref, x_ref, y_ref, mu_ref, gamma_ref, out_ref, *, L: int, loss: s
         g = (deriv(z1, yv[i]) - d0[i]) * x + mu
         return wbar - gamma * g
 
-    out_ref[0] = jax.lax.fori_loop(0, L, step, w0)
+    out_ref[0] = jax.lax.fori_loop(0, block_l, step, out_ref[0])
 
 
 def sodda_inner_pallas(w0, Xl, yl, mu, gamma, loss: str = "hinge",
-                       interpret: bool = True):
-    """w0 (B, mt), Xl (B, L, mt), yl (B, L), mu (B, mt), gamma scalar -> (B, mt)."""
+                       interpret: Optional[bool] = None,
+                       block_l: Optional[int] = None):
+    """w0 (B, mt), Xl (B, L, mt), yl (B, L), mu (B, mt), gamma scalar -> (B, mt).
+
+    `interpret=None` derives from `repro.platform.interpret_default()`
+    (compiled on TPU, interpreted elsewhere) — never pinned. `block_l=None`
+    means the single-tile default; anything else must be a legal
+    `BlockConfig.block_l` for (L, mt) per `tuning.validate_config`.
+    """
+    from repro.kernels import tuning  # deferred: tuning imports no kernels
+
     B, L, mt = Xl.shape
+    if interpret is None:
+        interpret = repro_platform.interpret_default()
+    if block_l is None:
+        block_l = L
+    tuning.validate_config(tuning.BlockConfig(block_l=block_l), L, mt)
+    n_tiles = L // block_l
     gamma_arr = jnp.broadcast_to(jnp.asarray(gamma, w0.dtype), (1,))
-    grid = (B,)
+    grid = (B, n_tiles)
     return pl.pallas_call(
-        functools.partial(_kernel, L=L, loss=loss),
+        functools.partial(_kernel, block_l=block_l, loss=loss),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, mt), lambda i: (i, 0)),
-            pl.BlockSpec((1, L, mt), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, mt), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, mt), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, block_l, mt), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_l), lambda b, j: (b, j)),
+            pl.BlockSpec((1, mt), lambda b, j: (b, 0)),
+            pl.BlockSpec((1,), lambda b, j: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, mt), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((1, mt), lambda b, j: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, mt), w0.dtype),
         interpret=interpret,
     )(w0, Xl, yl, mu, gamma_arr)

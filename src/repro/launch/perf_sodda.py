@@ -65,6 +65,11 @@ def analyze(cfg: SoddaConfig, gather: bool, compress: bool,
 
 
 def main():
+    from repro import platform as repro_platform
+
+    # latency-hiding XLA flags for the analyzed collectives (no-op on cpu);
+    # must precede the first jax backend touch below
+    repro_platform.configure()
     # production-scale GLM: 16x16 grid, 2M observations x 64k features
     cfg = SoddaConfig(P=16, Q=16, n=131072, m=4096, L=256)
     print(f"SODDA perf cell: N={cfg.N} M={cfg.M} grid 16x16, L={cfg.L}, "

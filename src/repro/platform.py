@@ -1,0 +1,117 @@
+"""Central host/device platform configuration.
+
+One place for everything that must be decided *about the machine* rather
+than about the algorithm: which backend we are on, whether Pallas kernels
+should run in interpret mode, which latency-hiding XLA flags to set, and
+how many fake host devices to force for CPU test grids. The driver,
+benchmarks, and the test harness all read platform facts from here so no
+module hard-codes "interpret=True" or scribbles over ``XLA_FLAGS``
+independently (the seed's `sodda_inner_pallas` pinned interpret mode on —
+correct on CPU, silently wrong on TPU).
+
+Flag setup must happen before jax initializes its backend; the helpers
+here merge into ``XLA_FLAGS`` idempotently instead of clobbering it, so
+conftest's forced device count and a benchmark's latency-hiding flags
+compose in either order.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+# Latency-hiding flags per backend family. TPU's scheduler flags let XLA
+# overlap the snapshot-gradient collectives with the inner-loop compute
+# (the async/async-mesh backends' whole point); the GPU set is the
+# standard async-collectives pair. CPU gets none — the fake host grid's
+# collectives are memcpys.
+LATENCY_HIDING_FLAGS = {
+    "tpu": (
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_enable_async_all_gather=true",
+        "--xla_enable_async_collective_permute=true",
+    ),
+    "gpu": (
+        "--xla_gpu_enable_async_collectives=true",
+        "--xla_gpu_enable_latency_hiding_scheduler=true",
+        "--xla_gpu_enable_highest_priority_async_stream=true",
+    ),
+    "cpu": (),
+}
+
+
+def platform() -> str:
+    """The active jax backend name ("cpu" | "gpu" | "tpu").
+
+    Imports jax lazily: callers that only *write* env flags (and must run
+    before jax initializes) never touch this.
+    """
+    import jax
+
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return platform() == "tpu"
+
+
+def interpret_default(plat: Optional[str] = None) -> bool:
+    """Whether Pallas kernels should run in interpret mode.
+
+    Interpret mode is the CPU/GPU emulation path; on TPU the kernels
+    compile to Mosaic and interpret mode would silently discard the whole
+    point of writing them. Everything that builds a `pallas_call` derives
+    its default from here rather than pinning a literal.
+    """
+    plat = platform() if plat is None else plat
+    return plat != "tpu"
+
+
+def merge_xla_flags(new_flags: Sequence[str]) -> str:
+    """Merge `new_flags` into ``os.environ["XLA_FLAGS"]`` idempotently.
+
+    A flag already present (by its `--name` prefix) is left alone — the
+    user's explicit setting wins. Returns the resulting flag string. Only
+    affects backends not yet initialized; call before first jax use.
+    """
+    existing = os.environ.get("XLA_FLAGS", "").split()
+    have = {f.split("=", 1)[0] for f in existing}
+    for flag in new_flags:
+        if flag.split("=", 1)[0] not in have:
+            existing.append(flag)
+            have.add(flag.split("=", 1)[0])
+    merged = " ".join(existing)
+    if merged:
+        os.environ["XLA_FLAGS"] = merged
+    return merged
+
+
+def configure(plat: Optional[str] = None,
+              host_devices: Optional[int] = None) -> str:
+    """Set up the process for `plat`: latency-hiding flags + device count.
+
+    The one call drivers and benchmarks make at entry. `plat` defaults to
+    the ``REPRO_PLATFORM`` env var and falls back to "cpu" — deliberately
+    NOT `platform()`, which would initialize jax and make the flags moot.
+    """
+    if plat is None:
+        plat = os.environ.get("REPRO_PLATFORM", "cpu")
+    flags = list(LATENCY_HIDING_FLAGS.get(plat, ()))
+    if host_devices is not None:
+        set_host_device_count(host_devices)
+    return merge_xla_flags(flags)
+
+
+def set_host_device_count(n: int) -> None:
+    """Force `n` fake host devices (CPU test grids). Never lowers a
+    pre-existing forced count; must run before jax initializes."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVICE_COUNT_FLAG in flags:
+        current = int(flags.split(f"{_DEVICE_COUNT_FLAG}=")[1].split()[0])
+        if current >= n:
+            return
+        flags = " ".join(
+            p for p in flags.split() if not p.startswith(_DEVICE_COUNT_FLAG))
+        os.environ["XLA_FLAGS"] = flags
+    merge_xla_flags((f"{_DEVICE_COUNT_FLAG}={n}",))

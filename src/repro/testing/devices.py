@@ -21,16 +21,13 @@ def force_host_devices(n: int = DEFAULT_TEST_DEVICES) -> None:
     """Arrange for the current process to see `n` host devices.
 
     Must run before jax initializes its backend; idempotent, and never
-    *lowers* an existing forced count. Raises if jax already initialized
-    with too few devices (the caller imported jax too early).
+    *lowers* an existing forced count (the flag surgery itself lives in
+    `repro.platform.set_host_device_count`). Raises if jax already
+    initialized with too few devices (the caller imported jax too early).
     """
-    flags = os.environ.get("XLA_FLAGS", "")
-    if _FLAG in flags:
-        current = int(flags.split(f"{_FLAG}=")[1].split()[0])
-        if current >= n:
-            return
-        flags = " ".join(p for p in flags.split() if not p.startswith(_FLAG))
-    os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}={n}".strip()
+    from repro import platform as repro_platform
+
+    repro_platform.set_host_device_count(n)
 
     if "jax" in sys.modules:
         import jax

@@ -293,6 +293,244 @@ def test_bench_driver_preserves_streaming_block(monkeypatch, tmp_path):
     assert json.loads(out.read_text())["streaming"] == _valid_streaming()
 
 
+def _valid_tuning():
+    return {
+        "loss": "hinge", "B": 8, "L": 32, "mt": 256, "platform": "cpu",
+        "interpret": True,
+        "default_config": {"block_l": 32}, "tuned_config": {"block_l": 32},
+        "default_us": 100.0, "tuned_us": 100.0,
+        "tuned_vs_default_us_ratio": 1.0,
+        "legal_block_l": [32, 16, 8, 4, 2, 1],
+    }
+
+
+def test_schema_accepts_tuning_block():
+    payload = _valid_payload()
+    payload["tuning"] = _valid_tuning()
+    assert validate_bench.validate(payload)
+    # a genuine tuning win validates too (ratio consistent and < 1)
+    payload["tuning"].update(tuned_config={"block_l": 16}, tuned_us=80.0,
+                             tuned_vs_default_us_ratio=0.8)
+    assert validate_bench.validate(payload)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    # THE acceptance criterion: tuning may never regress the default
+    (lambda tn: tn.update(tuned_us=110.0, tuned_vs_default_us_ratio=1.1),
+     "<= 1.0"),
+    # a ratio that disagrees with the us values it summarizes
+    (lambda tn: tn.update(tuned_vs_default_us_ratio=0.5), "not"),
+    (lambda tn: tn.update(interpret="yes"), "interpret"),
+    (lambda tn: tn.update(B=0), "tuning.B"),
+    (lambda tn: tn.update(default_us=0), "default_us"),
+    (lambda tn: tn.update(tuned_config={"block_l": 0}), "tuned_config"),
+    (lambda tn: tn.pop("loss"), "loss"),
+])
+def test_schema_rejects_tuning_violations(mutate, match):
+    payload = _valid_payload()
+    payload["tuning"] = _valid_tuning()
+    mutate(payload["tuning"])
+    with pytest.raises(validate_bench.BenchSchemaError, match=match):
+        validate_bench.validate(payload)
+
+
+def test_validate_cli_require_tuning(tmp_path, capsys):
+    import json
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(_valid_payload()))
+    assert validate_bench.main([str(bare)]) == 0
+    assert validate_bench.main([str(bare), "--require-tuning"]) == 1
+    assert "tuning" in capsys.readouterr().out
+    full_payload = _valid_payload()
+    full_payload["tuning"] = _valid_tuning()
+    full = tmp_path / "full.json"
+    full.write_text(json.dumps(full_payload))
+    assert validate_bench.main([str(full), "--require-tuning"]) == 0
+
+
+def test_validate_cli_help_exits_zero(capsys):
+    """The satellite fix: --help used to be opened as an artifact path
+    (traceback); it is a successful invocation like in every other CLI."""
+    assert validate_bench.main(["--help"]) == 0
+    assert "validate_bench" in capsys.readouterr().out  # usage doc printed
+    assert validate_bench.main(["-h"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# bench_history/v1: the committed per-PR trajectory.
+# ---------------------------------------------------------------------------
+def _history_lines(n=2):
+    import json
+    lines = []
+    for i in range(1, n + 1):
+        entry = bench_trend.history_entry(_valid_payload(), i, f"PR{i}",
+                                          f"2026-08-0{i}")
+        lines.append(json.dumps(entry, sort_keys=True))
+    return lines
+
+
+def test_validate_history_accepts_trajectory():
+    entries = validate_bench.validate_history("\n".join(_history_lines(3)))
+    assert [e["seq"] for e in entries] == [1, 2, 3]
+
+
+@pytest.mark.parametrize("corrupt,match", [
+    (lambda ls: [], "no entries"),
+    (lambda ls: ls + ["{not json"], "not valid JSON"),
+    (lambda ls: [ls[0].replace("bench_history/v1", "bench_sodda/v1")] +
+     ls[1:], "schema"),
+    (lambda ls: list(reversed(ls)), "out of order"),
+    (lambda ls: [ls[0], ls[0]], "out of order"),  # duplicate seq
+    (lambda ls: [ls[0].replace('"PR1"', '""')], "label"),
+    (lambda ls: [ls[0].replace('"reference": 3.0', '"reference": 0')],
+     "positive"),
+])
+def test_validate_history_rejects_corruption(corrupt, match):
+    lines = corrupt(_history_lines(2))
+    with pytest.raises(validate_bench.BenchSchemaError, match=match):
+        validate_bench.validate_history("\n".join(lines))
+
+
+def test_validate_history_bounds_tuning_ratio():
+    import json
+    entry = bench_trend.history_entry(_valid_payload(), 1, "PR1", "2026-08-01")
+    entry["tuning"] = {"tuned_vs_default_us_ratio": 1.2}
+    with pytest.raises(validate_bench.BenchSchemaError, match="0, 1"):
+        validate_bench.validate_history(json.dumps(entry))
+    entry["tuning"] = {"tuned_vs_default_us_ratio": 0.9}
+    assert validate_bench.validate_history(json.dumps(entry))
+
+
+def test_validate_cli_history_mode(tmp_path, capsys):
+    good = tmp_path / "h.jsonl"
+    good.write_text("\n".join(_history_lines(2)) + "\n")
+    assert validate_bench.main(["--history", str(good)]) == 0
+    assert "entries=2" in capsys.readouterr().out
+    # --history validates a trajectory, not an artifact: the artifact
+    # require flags make no sense against it
+    assert validate_bench.main(
+        ["--history", str(good), "--require-tuning"]) == 2
+
+
+def test_validate_cli_history_mode_rejects_malformed(tmp_path):
+    bad = tmp_path / "h.jsonl"
+    lines = _history_lines(2)
+    bad.write_text("\n".join(reversed(lines)) + "\n")
+    with pytest.raises(validate_bench.BenchSchemaError, match="out of order"):
+        validate_bench.main(["--history", str(bad)])
+
+
+# ---------------------------------------------------------------------------
+# tools/bench_trend.py --history: the rolling-best trajectory gate.
+# ---------------------------------------------------------------------------
+def _write_history(tmp_path, lines, name="h.jsonl"):
+    p = tmp_path / name
+    p.write_text("\n".join(lines) + ("\n" if lines else ""))
+    return str(p)
+
+
+def test_history_gate_passes_and_catches_regression(tmp_path, capsys):
+    h = _write_history(tmp_path, _history_lines(2))
+    cur = _valid_payload()  # same numbers as the trajectory: ratio 1.0
+    c = _write(tmp_path, "c.json", cur)
+    assert bench_trend.main(["--history", h, c, "--threshold", "0.25"]) == 0
+    # regress beyond the threshold vs the ROLLING BEST
+    cur["backends"]["reference"]["scan_driver"]["us_per_iter"] = 4.5
+    c = _write(tmp_path, "c2.json", cur)
+    assert bench_trend.main(["--history", h, c, "--threshold", "0.25"]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_history_gate_rolling_best_not_latest(tmp_path):
+    """A slow latest entry must not mask a regression: the gate compares
+    against the best the trajectory ever recorded."""
+    import json
+    fast = bench_trend.history_entry(_valid_payload(), 1, "PR1", "2026-08-01")
+    slow_payload = copy.deepcopy(_valid_payload())
+    slow_payload["backends"]["reference"]["scan_driver"]["us_per_iter"] = 9.0
+    slow = bench_trend.history_entry(slow_payload, 2, "PR2", "2026-08-02")
+    h = _write_history(tmp_path, [json.dumps(fast), json.dumps(slow)])
+    cur = _write(tmp_path, "c.json", slow_payload)  # 9.0 vs best 3.0
+    assert bench_trend.main(["--history", h, cur,
+                             "--threshold", "0.25"]) == 1
+
+
+def test_history_gate_rejects_malformed_trajectory(tmp_path, capsys):
+    c = _write(tmp_path, "c.json", _valid_payload())
+    bad = _write_history(tmp_path, _history_lines(1) + ["{broken"])
+    assert bench_trend.main(["--history", bad, c]) == 2
+    out_of_order = _write_history(tmp_path, list(reversed(_history_lines(2))),
+                                  "o.jsonl")
+    assert bench_trend.main(["--history", out_of_order, c]) == 2
+    assert "ERROR" in capsys.readouterr().out
+
+
+def test_history_gate_no_comparable_entry(tmp_path, capsys):
+    c = _write(tmp_path, "c.json", _valid_payload())
+    other = copy.deepcopy(_valid_payload())
+    other["iters"] = 99
+    import json
+    h = _write_history(tmp_path, [json.dumps(
+        bench_trend.history_entry(other, 1, "PR1", "2026-08-01"))])
+    assert bench_trend.main(["--history", h, c]) == 3
+    assert "INCOMPARABLE" in capsys.readouterr().out
+    empty = _write_history(tmp_path, [], "e.jsonl")
+    assert bench_trend.main(["--history", empty, c]) == 3
+
+
+def test_history_gate_append_extends_trajectory(tmp_path):
+    import json
+    h = _write_history(tmp_path, _history_lines(2))
+    cur = _valid_payload()
+    cur["tuning"] = _valid_tuning()
+    c = _write(tmp_path, "c.json", cur)
+    assert bench_trend.main(["--history", h, c, "--append",
+                             "--label", "PR9", "--date", "2026-08-08"]) == 0
+    lines = [ln for ln in open(h).read().splitlines() if ln.strip()]
+    assert len(lines) == 3
+    tail = json.loads(lines[-1])
+    assert tail["seq"] == 3 and tail["label"] == "PR9"
+    assert tail["date"] == "2026-08-08"
+    assert tail["tuning"] == {"tuned_vs_default_us_ratio": 1.0}
+    # the appended trajectory still validates in depth
+    assert validate_bench.validate_history(open(h).read())
+
+
+def test_history_gate_failing_run_does_not_append(tmp_path):
+    h = _write_history(tmp_path, _history_lines(2))
+    cur = _valid_payload()
+    cur["backends"]["reference"]["scan_driver"]["us_per_iter"] = 99.0
+    c = _write(tmp_path, "c.json", cur)
+    assert bench_trend.main(["--history", h, c, "--append",
+                             "--threshold", "0.25"]) == 1
+    assert len(open(h).read().splitlines()) == 2  # unchanged
+
+
+def test_history_gate_usage_errors(tmp_path):
+    b = _write(tmp_path, "b.json", _valid_payload())
+    # --history replaces the baseline positional
+    assert bench_trend.main(["--history", str(tmp_path / "h.jsonl"),
+                             b, b]) == 2
+    # --append is meaningless without a trajectory to extend
+    assert bench_trend.main([b, b, "--append"]) == 2
+    # unreadable trajectory
+    assert bench_trend.main(["--history", str(tmp_path / "nope.jsonl"),
+                             b]) == 2
+
+
+def test_committed_history_gates_committed_artifact():
+    """The repo's own trajectory must stay schema-valid AND pass its own
+    gate against the committed artifact — CI runs exactly this."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    hist = os.path.join(root, "results", "BENCH_history.jsonl")
+    art = os.path.join(root, "results", "BENCH_sodda.json")
+    with open(hist) as f:
+        entries = validate_bench.validate_history(f.read())
+    assert len(entries) >= 2  # the PR's acceptance criterion
+    assert bench_trend.main(["--history", hist, art,
+                             "--threshold", "0.5"]) == 0
+
+
 # ---------------------------------------------------------------------------
 # tools/bench_trend.py: the us/iter regression gate between two artifacts.
 # ---------------------------------------------------------------------------

@@ -21,7 +21,7 @@ def test_repo_docs_have_no_dangling_references():
 
 def test_docs_pages_exist_and_are_linked_from_readme():
     for page in ("architecture.md", "backends.md", "benchmarks.md",
-                 "data.md", "fault_tolerance.md"):
+                 "data.md", "fault_tolerance.md", "kernels.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
@@ -30,6 +30,7 @@ def test_docs_pages_exist_and_are_linked_from_readme():
     assert "docs/benchmarks.md" in readme
     assert "docs/data.md" in readme
     assert "docs/fault_tolerance.md" in readme
+    assert "docs/kernels.md" in readme
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +176,53 @@ def test_fault_tolerance_drift_check_flags_undocumented_name(tmp_path):
     assert len(errors) == 1 and "missing" in errors[0]
     # foreign tree without the module: nothing to check
     assert check_docs.check_fault_tolerance_documented(
+        str(tmp_path / "docs")) == []
+
+
+# ---------------------------------------------------------------------------
+# Kernel-tuning↔docs drift: every public name of repro.kernels.tuning must
+# have a docs/kernels.md entry, and the static scan must agree with the
+# runtime module it stands in for.
+# ---------------------------------------------------------------------------
+def test_kernel_tuning_scan_matches_runtime_module():
+    from repro.kernels import tuning
+    scanned = check_docs.kernel_tuning_api(os.path.abspath(ROOT))
+    runtime = sorted(
+        n for n, obj in vars(tuning).items()
+        if not n.startswith("_") and callable(obj)
+        and getattr(obj, "__module__", None) == tuning.__name__)
+    assert scanned == runtime, (scanned, runtime)
+    assert "BlockConfig" in scanned and "autotune" in scanned
+
+
+def test_every_kernel_tuning_name_is_documented():
+    errors = check_docs.check_kernel_tuning_documented(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_kernel_tuning_drift_check_flags_undocumented_name(tmp_path):
+    kdir = tmp_path / "src" / "repro" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "tuning.py").write_text(
+        "class BlockConfig:\n    def as_dict(self): ...\n"
+        "def _private(): ...\n"
+        "def ghost_knob(): ...\n")
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "kernels.md").write_text("`BlockConfig` is covered\n")
+    errors = check_docs.check_kernel_tuning_documented(str(tmp_path))
+    # `as_dict` (indented method) and `_private` are exempt
+    assert len(errors) == 1 and "`ghost_knob`" in errors[0], errors
+    (tmp_path / "README.md").write_text("clean\n")
+    assert errors[0] in check_docs.check_tree(str(tmp_path))
+    (docs / "kernels.md").write_text("`BlockConfig` `ghost_knob`\n")
+    assert check_docs.check_kernel_tuning_documented(str(tmp_path)) == []
+    # missing page with a non-empty module is drift too
+    (docs / "kernels.md").unlink()
+    errors = check_docs.check_kernel_tuning_documented(str(tmp_path))
+    assert len(errors) == 1 and "missing" in errors[0]
+    # foreign tree without the module: nothing to check
+    assert check_docs.check_kernel_tuning_documented(
         str(tmp_path / "docs")) == []
 
 

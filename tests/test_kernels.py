@@ -48,6 +48,142 @@ def test_sodda_inner_ops_padding():
 
 
 # ---------------------------------------------------------------------------
+# sodda_inner: the blocked-schedule conformance battery.
+#
+# tuning.BlockConfig tiles the L dimension; the kernel's hoisted snapshot
+# matvec is per-row independent, so every legal block_l must be BITWISE
+# against the single-tile default — and all of them track the jnp oracle
+# within the usual hoisted-matvec accumulation tolerance.
+# ---------------------------------------------------------------------------
+from repro.core.losses import LOSSES  # noqa: E402
+from repro.kernels import tuning  # noqa: E402
+
+_DERIV_TOL = dict(rtol=3e-4, atol=2e-5)  # hoisted-matvec accumulation order
+
+
+def _sodda_case(B, L, mt, seed):
+    w0 = jax.random.normal(k(seed), (B, mt)) * 0.1
+    Xl = jax.random.normal(k(seed + 1), (B, L, mt))
+    yl = jnp.sign(jax.random.normal(k(seed + 2), (B, L)))
+    mu = jax.random.normal(k(seed + 3), (B, mt)) * 0.01
+    return w0, Xl, yl, mu
+
+
+@pytest.mark.parametrize("loss", sorted(LOSSES))
+@pytest.mark.parametrize("block_l", [1, 2, 4, 8])
+def test_sodda_inner_blocked_vs_ref(loss, block_l):
+    """Every schedule x every registered loss against the oracle, at a
+    deliberately non-128-aligned mt (the ops padding path)."""
+    B, L, mt = 2, 8, 130
+    w0, Xl, yl, mu = _sodda_case(B, L, mt, 50)
+    out = ops.sodda_inner(w0, Xl, yl, mu, 0.04, loss, force="pallas",
+                          block_l=block_l)
+    want = ref.sodda_inner_ref(w0, Xl, yl, mu, 0.04, loss)
+    np.testing.assert_allclose(out, want, **_DERIV_TOL)
+
+
+@pytest.mark.parametrize("loss", sorted(LOSSES))
+def test_sodda_inner_every_legal_block_bitwise(loss):
+    """The BITWISE anchor: each legal BlockConfig vs the default schedule,
+    raw kernel level. Tiling may only change the schedule, never a bit."""
+    B, L, mt = 3, 12, 256
+    w0, Xl, yl, mu = _sodda_case(B, L, mt, 60)
+    base = sodda_inner_pallas(w0, Xl, yl, mu, 0.03, loss)
+    legal = tuning.legal_configs(L, mt)
+    assert [c.block_l for c in legal][0] == L  # default is the first cand.
+    assert len(legal) >= 4
+    for cfg in legal:
+        got = sodda_inner_pallas(w0, Xl, yl, mu, 0.03, loss,
+                                 block_l=cfg.block_l)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(got),
+                                      err_msg=f"{loss} {cfg}")
+
+
+def test_sodda_inner_rejects_illegal_block():
+    """The kernel validates through tuning — illegal schedules get the
+    named refusal, not a wrong-answer launch."""
+    B, L, mt = 1, 8, 128
+    w0, Xl, yl, mu = _sodda_case(B, L, mt, 70)
+    with pytest.raises(tuning.AlignmentError):
+        sodda_inner_pallas(w0, Xl, yl, mu, 0.03, "hinge", block_l=3)
+
+
+# Property sweep: hypothesis when available, an example-based sweep of the
+# same draw space otherwise (this container has no hypothesis wheel).
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+_PROP_CASES = [  # (L, block_l, mt, loss) — mirrors the strategy's domain
+    (4, 2, 64, "hinge"), (6, 3, 100, "logistic"), (8, 4, 128, "squared"),
+    (12, 6, 200, "hinge"), (12, 4, 130, "logistic"), (6, 1, 64, "squared"),
+]
+
+
+def _check_blocked_matches_default(L, block_l, mt, loss, seed):
+    B = 2
+    w0, Xl, yl, mu = _sodda_case(B, L, tuning.padded_mt(mt), seed)
+    base = sodda_inner_pallas(w0, Xl, yl, mu, 0.05, loss)
+    got = sodda_inner_pallas(w0, Xl, yl, mu, 0.05, loss, block_l=block_l)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+if HAS_HYPOTHESIS:
+    @hypothesis.given(data=st.data(), seed=st.integers(0, 2 ** 16),
+                      loss=st.sampled_from(sorted(LOSSES)))
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def test_sodda_inner_blocked_property(data, seed, loss):
+        L = data.draw(st.sampled_from([4, 6, 8, 12]))
+        block_l = data.draw(st.sampled_from(
+            [b for b in range(1, L + 1) if L % b == 0]))
+        mt = data.draw(st.integers(1, 256))
+        _check_blocked_matches_default(L, block_l, mt, loss, seed % 97)
+else:
+    @pytest.mark.parametrize("L,block_l,mt,loss", _PROP_CASES)
+    def test_sodda_inner_blocked_property_fallback(L, block_l, mt, loss):
+        _check_blocked_matches_default(L, block_l, mt, loss, 80)
+
+
+def test_interpret_flag_threaded_not_pinned(monkeypatch):
+    """The seed pinned interpret=True inside ops — which would silently run
+    the emulator on TPU forever. Regression: the flag must be THREADED from
+    the caller (or repro.platform's default), never hard-coded."""
+    captured = []
+    real = ops.sodda_inner_pallas
+
+    def spy(*args, **kw):
+        captured.append(kw.get("interpret"))
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops, "sodda_inner_pallas", spy)
+    # unique mt per call: jit only re-traces (and so only re-hits the spy)
+    # on a fresh (shape, statics) cache key
+    w0, Xl, yl, mu = _sodda_case(1, 4, 137, 90)
+    ops.sodda_inner(w0, Xl, yl, mu, 0.03, "hinge", force="pallas",
+                    interpret=True)
+    w0, Xl, yl, mu = _sodda_case(1, 4, 139, 91)
+    ops.sodda_inner(w0, Xl, yl, mu, 0.03, "hinge", force="pallas")
+    assert captured == [True, None]  # explicit passes through; None defers
+
+
+def test_interpret_default_derives_from_platform(monkeypatch):
+    """interpret=None resolves via repro.platform.interpret_default — the
+    one switch that knows whether a compiled path exists."""
+    from repro.kernels import sodda_inner as si
+    calls = []
+    monkeypatch.setattr(si.repro_platform, "interpret_default",
+                        lambda: calls.append(1) or True)
+    w0, Xl, yl, mu = _sodda_case(1, 4, 128, 95)
+    si.sodda_inner_pallas(w0, Xl, yl, mu, 0.03, "hinge")  # None -> derived
+    assert calls == [1]
+    si.sodda_inner_pallas(w0, Xl, yl, mu, 0.03, "hinge", interpret=True)
+    assert calls == [1]  # explicit flag: platform not consulted
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("B,H,KV,S,D", [(1, 4, 4, 128, 64), (2, 4, 2, 256, 64),

@@ -1,0 +1,87 @@
+"""repro.platform: the one place interpret defaults and XLA flag setup
+live. These tests only touch the env-merging helpers with a scratch
+XLA_FLAGS — the real env (and the already-initialized jax backend) must
+come through untouched."""
+import pytest
+
+from repro import platform as repro_platform
+
+
+@pytest.fixture(autouse=True)
+def scratch_xla_flags(monkeypatch):
+    """Every test works on its own XLA_FLAGS; jax is already initialized
+    in this session so nothing here can affect the live backend."""
+    monkeypatch.setenv("XLA_FLAGS", "")
+    yield
+
+
+def test_interpret_default_by_platform():
+    assert repro_platform.interpret_default("cpu") is True
+    assert repro_platform.interpret_default("gpu") is True
+    assert repro_platform.interpret_default("tpu") is False
+
+
+def test_interpret_default_uses_active_backend():
+    # on the test host jax runs on cpu, so the derived default is interpret
+    assert repro_platform.platform() == "cpu"
+    assert repro_platform.interpret_default() is True
+
+
+def test_merge_xla_flags_idempotent(monkeypatch):
+    import os
+    a = repro_platform.merge_xla_flags(("--xla_foo=1", "--xla_bar=2"))
+    b = repro_platform.merge_xla_flags(("--xla_foo=1", "--xla_bar=2"))
+    assert a == b == "--xla_foo=1 --xla_bar=2"
+    assert os.environ["XLA_FLAGS"] == a
+
+
+def test_merge_xla_flags_existing_setting_wins(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_foo=user")
+    merged = repro_platform.merge_xla_flags(("--xla_foo=ours", "--xla_new=1"))
+    assert merged == "--xla_foo=user --xla_new=1"
+
+
+def test_configure_defaults_to_cpu_without_touching_jax(monkeypatch):
+    """configure() must not initialize jax to pick a platform — that would
+    freeze the backend before the flags it sets could matter. cpu sets no
+    latency-hiding flags at all."""
+    monkeypatch.delenv("REPRO_PLATFORM", raising=False)
+    assert repro_platform.configure() == ""
+    monkeypatch.setenv("REPRO_PLATFORM", "tpu")
+    merged = repro_platform.configure()
+    assert "--xla_tpu_enable_async_collective_fusion=true" in merged
+
+
+def test_configure_explicit_platform(monkeypatch):
+    merged = repro_platform.configure(plat="gpu")
+    for flag in repro_platform.LATENCY_HIDING_FLAGS["gpu"]:
+        assert flag in merged
+
+
+def test_set_host_device_count_never_lowers(monkeypatch):
+    import os
+    repro_platform.set_host_device_count(8)
+    assert "--xla_force_host_platform_device_count=8" \
+        in os.environ["XLA_FLAGS"]
+    repro_platform.set_host_device_count(4)  # a lower ask is a no-op
+    assert "--xla_force_host_platform_device_count=8" \
+        in os.environ["XLA_FLAGS"]
+    repro_platform.set_host_device_count(12)  # a higher ask raises it
+    flags = os.environ["XLA_FLAGS"]
+    assert "--xla_force_host_platform_device_count=12" in flags
+    assert "count=8" not in flags
+
+
+def test_testing_devices_delegates_to_platform(monkeypatch):
+    """The harness's force_host_devices is a thin wrapper over
+    set_host_device_count — one owner for the flag format."""
+    import os
+    from repro.testing import devices
+    calls = []
+    monkeypatch.setattr(repro_platform, "set_host_device_count",
+                        lambda n: calls.append(n))
+    try:
+        devices.force_host_devices(6)
+    except RuntimeError:
+        pass  # jax already initialized in-session: the post-check may trip
+    assert calls == [6]

@@ -1,0 +1,187 @@
+"""The roofline cost model (repro.launch.roofline) against hand-computed
+HLO: collective parsing for every kind (sync and async forms, both
+replica_groups syntaxes, tuple shapes), the probe extrapolation, and the
+Roofline bottleneck/fraction properties the perf tables are built on."""
+import pytest
+
+from repro.launch import roofline
+from repro.launch.roofline import (Roofline, collective_stats, extrapolate,
+                                   total_link_bytes)
+
+
+def _only(stats, kind):
+    """The one populated kind's cell; every other kind must be empty."""
+    for k, v in stats.items():
+        if k != kind:
+            assert v["count"] == 0, (k, v)
+    return stats[kind]
+
+
+# ---------------------------------------------------------------------------
+# collective_stats: one test per collective kind, link bytes hand-computed
+# from the ring-algorithm formulas in the module.
+# ---------------------------------------------------------------------------
+def test_all_reduce_link_bytes():
+    hlo = "%ar = f32[256] all-reduce(%x), replica_groups=[2,4], to_apply=%sum"
+    cell = _only(collective_stats(hlo, 8), "all-reduce")
+    rb = 256 * 4
+    assert cell["count"] == 1
+    assert cell["result_bytes"] == rb
+    # ring all-reduce: 2(g-1)/g of the buffer crosses each link; the [2,4]
+    # syntax means 2 groups of size 4 — group size is the SECOND number
+    assert cell["link_bytes"] == pytest.approx(2.0 * 3 / 4 * rb)
+
+
+def test_all_gather_link_bytes():
+    hlo = ("%ag = f32[8,128] all-gather(%x), replica_groups={{0,1,2,3}}, "
+           "dimensions={0}")
+    cell = _only(collective_stats(hlo, 16), "all-gather")
+    rb = 8 * 128 * 4
+    # the result IS the gathered buffer: (g-1)/g of it arrives over links,
+    # with g from the explicit 4-member list, not the 16-device default
+    assert cell["link_bytes"] == pytest.approx(3 / 4 * rb)
+
+
+def test_reduce_scatter_link_bytes():
+    hlo = "%rs = f32[64] reduce-scatter(%x), replica_groups=[1,8], to_apply=%s"
+    cell = _only(collective_stats(hlo, 8), "reduce-scatter")
+    rb = 64 * 4
+    # operand is g x the result shape, so (g-1) result-sized chunks move
+    assert cell["link_bytes"] == pytest.approx(7 * rb)
+
+
+def test_all_to_all_link_bytes():
+    hlo = "%a2a = f32[4,32] all-to-all(%x), replica_groups=[1,4]"
+    cell = _only(collective_stats(hlo, 4), "all-to-all")
+    rb = 4 * 32 * 4
+    assert cell["link_bytes"] == pytest.approx(3 / 4 * rb)
+
+
+def test_collective_permute_link_bytes():
+    hlo = ("%cp = bf16[128] collective-permute(%x), "
+           "source_target_pairs={{0,1},{1,0}}")
+    cell = _only(collective_stats(hlo, 2), "collective-permute")
+    # every byte crosses exactly one link; bf16 counts at 2 B
+    assert cell["link_bytes"] == pytest.approx(128 * 2)
+
+
+def test_async_start_forms_counted():
+    """all-gather-start etc. (the async collectives the latency-hiding
+    flags split) count exactly like their sync forms — and the matching
+    -done line (no '=<shape> <kind>(' pattern) must not double-count."""
+    hlo = "\n".join([
+        "%ags = f32[128] all-gather-start(%x), replica_groups=[1,4]",
+        "%agd = f32[128] all-gather-done(%ags)",
+        "%ars = f32[128] all-reduce-start(%y), replica_groups=[1,4]",
+    ])
+    stats = collective_stats(hlo, 4)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-gather"]["link_bytes"] == pytest.approx(3 / 4 * 128 * 4)
+
+
+def test_tuple_result_shape_sums_components():
+    hlo = ("%ar = (f32[128], f32[64]) all-reduce(%a, %b), "
+           "replica_groups=[1,2], to_apply=%sum")
+    cell = _only(collective_stats(hlo, 2), "all-reduce")
+    rb = (128 + 64) * 4
+    assert cell["result_bytes"] == rb
+    assert cell["link_bytes"] == pytest.approx(2.0 * 1 / 2 * rb)
+
+
+def test_unknown_dtype_skipped():
+    """token/opaque results price at 0 bytes and the op is not counted —
+    a control-dependency collective is not wire traffic."""
+    hlo = "%t = token[] all-reduce(%x), replica_groups=[1,4]"
+    stats = collective_stats(hlo, 4)
+    assert stats["all-reduce"]["count"] == 0
+    assert total_link_bytes(stats) == 0.0
+
+
+def test_promoted_bf16_reduction_halved():
+    """The CPU backend promotes bf16 all-reduces to f32; counting the
+    promoted width would double the modeled wire bytes vs the TPU's
+    native-bf16 reduction. Only reductions halve — a gather moves the
+    buffer at whatever width it has."""
+    ar = ("%ar = f32[256] all-reduce(%x), replica_groups=[1,4], "
+          "to_apply=%add.clone_promoted")
+    cell = _only(collective_stats(ar, 4), "all-reduce")
+    assert cell["result_bytes"] == 256 * 4 / 2
+    ag = ("%ag = f32[256] all-gather(%x), replica_groups=[1,4] "
+          "promoted_marker")
+    assert collective_stats(ag, 4)["all-gather"]["result_bytes"] == 256 * 4
+
+
+def test_missing_replica_groups_defaults_to_n_devices():
+    hlo = "%ar = f32[100] all-reduce(%x), to_apply=%sum"
+    cell = _only(collective_stats(hlo, 5), "all-reduce")
+    assert cell["link_bytes"] == pytest.approx(2.0 * 4 / 5 * 100 * 4)
+
+
+def test_total_link_bytes_sums_kinds():
+    hlo = "\n".join([
+        "%ar = f32[128] all-reduce(%x), replica_groups=[1,4], to_apply=%s",
+        "%cp = f32[128] collective-permute(%y), source_target_pairs={{0,1}}",
+    ])
+    stats = collective_stats(hlo, 4)
+    want = 2.0 * 3 / 4 * 128 * 4 + 128 * 4
+    assert total_link_bytes(stats) == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# extrapolate: the two-probe scheme is exact for layer-homogeneous stacks.
+# ---------------------------------------------------------------------------
+def test_extrapolate_exact_for_homogeneous_stack():
+    base, per_layer = 37.0, 11.0
+
+    def cost(layers):
+        return base + per_layer * layers
+
+    p = 2
+    for L in (2, 4, 8, 64, 256):
+        got = extrapolate(cost(p), cost(2 * p), L / p)
+        assert got == pytest.approx(cost(L)), L
+
+
+def test_extrapolate_identity_at_probe_depths():
+    assert extrapolate(10.0, 14.0, 1.0) == pytest.approx(10.0)
+    assert extrapolate(10.0, 14.0, 2.0) == pytest.approx(14.0)
+
+
+# ---------------------------------------------------------------------------
+# Roofline: bottleneck selection and the zero-division guards.
+# ---------------------------------------------------------------------------
+def _rf(flops=0.0, hbm=0.0, link=0.0, chips=1, model_flops=0.0):
+    return Roofline(flops_per_device=flops, hbm_bytes_per_device=hbm,
+                    link_bytes_per_device=link, chips=chips,
+                    model_flops=model_flops)
+
+
+def test_bottleneck_selection_each_term():
+    flops_1s = roofline.PEAK_FLOPS  # exactly 1 s of compute
+    assert _rf(flops=flops_1s, hbm=roofline.HBM_BW / 2).bottleneck == "compute"
+    assert _rf(flops=flops_1s / 2, hbm=roofline.HBM_BW).bottleneck == "memory"
+    r = _rf(flops=flops_1s / 2, hbm=roofline.HBM_BW / 2, link=roofline.LINK_BW)
+    assert r.bottleneck == "collective"
+    assert r.t_bound == pytest.approx(1.0)
+
+
+def test_roofline_fractions():
+    r = _rf(flops=2 * roofline.PEAK_FLOPS, chips=4,
+            model_flops=4 * roofline.PEAK_FLOPS)
+    # useful: model flops over global HLO flops (2 s/device x 4 chips)
+    assert r.useful_fraction == pytest.approx(0.5)
+    # bound time 2 s -> mfu bound = model / (4 * peak * 2)
+    assert r.roofline_fraction == pytest.approx(0.5)
+    d = r.as_dict()
+    assert d["bottleneck"] == "compute"
+    assert d["useful_flops_fraction"] == pytest.approx(0.5)
+
+
+def test_roofline_zero_division_guards():
+    """An all-zero artifact (e.g. a constant-folded probe) must report 0
+    fractions, not raise."""
+    r = _rf()
+    assert r.useful_fraction == 0.0
+    assert r.roofline_fraction == 0.0
+    assert r.t_bound == 0.0

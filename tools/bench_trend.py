@@ -1,16 +1,26 @@
-"""Bench trend gate: diff two BENCH_sodda.json files, fail on regression.
+"""Bench trend gate: per-backend us/iter regression against a baseline.
 
-Compares the per-backend scan-driver ``us_per_iter`` of a freshly generated
-``results/BENCH_sodda.json`` against a baseline (normally the committed one)
-and fails when any backend regressed by more than ``--threshold`` (default
-0.25 = 25%). The CI bench-smoke job runs this after regenerating the
-artifact, so a PR that slows a hot path down fails loudly instead of
-silently shifting the committed numbers.
+Two modes, one metric (per-backend ``scan_driver.us_per_iter``):
+
+* **Two-point** (the original): diff a freshly generated
+  ``results/BENCH_sodda.json`` against a baseline file (normally the
+  committed one) and fail when any backend regressed by more than
+  ``--threshold`` (default 0.25 = 25%).
+* **Trajectory** (``--history``): gate the current artifact against the
+  *rolling best* of the committed per-PR trajectory
+  ``results/BENCH_history.jsonl`` (schema ``bench_history/v1``, one JSON
+  object per line, strictly ascending ``seq``; validated in depth by
+  ``benchmarks.validate_bench --history``). Entries measuring a different
+  problem/iters are skipped with a note; the gate refuses (exit 3) when no
+  entry is comparable. ``--append`` appends the current artifact as the
+  next entry after a passing gate — how CI grows the trajectory.
 
 Pure stdlib (json only) — runnable in the dependency-free CI jobs.
 
     python tools/bench_trend.py results_baseline.json results/BENCH_sodda.json
     python tools/bench_trend.py base.json new.json --threshold 0.5
+    python tools/bench_trend.py --history results/BENCH_history.jsonl \\
+        results/BENCH_sodda.json [--append --label PR9]
 
 Exit codes (documented in docs/benchmarks.md):
 
@@ -18,11 +28,12 @@ Exit codes (documented in docs/benchmarks.md):
        reported but never fail — they appear and retire across PRs);
        also ``--help``/``--version``, which exit 0 like every CLI
     1  at least one backend's scan us/iter regressed beyond the threshold
-    2  usage error (bad arguments, unreadable/invalid file)
+    2  usage error (bad arguments, unreadable/invalid/malformed or
+       out-of-order file contents)
     3  incomparable artifacts: schema, problem, or iteration count differ,
-       or either artifact has a missing/empty ``backends`` map — a trend
-       over different (or zero) measurements is meaningless, so the gate
-       refuses rather than passes
+       either artifact has a missing/empty ``backends`` map, or no history
+       entry is comparable — a trend over different, or zero, measurements
+       is refused, not passed
 """
 from __future__ import annotations
 
@@ -31,6 +42,7 @@ import json
 import sys
 
 _METRIC = ("scan_driver", "us_per_iter")
+HISTORY_SCHEMA = "bench_history/v1"
 
 
 def load(path: str) -> dict:
@@ -74,15 +86,155 @@ def _metric(cell: dict) -> float:
     return float(cell[_METRIC[0]][_METRIC[1]])
 
 
+def load_history(path: str) -> list:
+    """Parse + minimally validate a bench_history/v1 JSONL trajectory.
+
+    Raises ``ValueError`` on malformed lines, wrong schema, or
+    out-of-order ``seq`` — the same conditions ``benchmarks.validate_bench
+    --history`` rejects in depth (this tool stays stdlib-only, so it
+    re-checks just what the gate relies on).
+    """
+    entries, prev_seq = [], None
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    for i, line in enumerate(lines, 1):
+        try:
+            entry = json.loads(line)
+        except ValueError as e:
+            raise ValueError(f"history line {i}: not valid JSON ({e})")
+        if not isinstance(entry, dict) \
+                or entry.get("schema") != HISTORY_SCHEMA:
+            raise ValueError(
+                f"history line {i}: schema must be {HISTORY_SCHEMA!r}, "
+                f"got {entry.get('schema') if isinstance(entry, dict) else entry!r}")
+        seq = entry.get("seq")
+        if not isinstance(seq, int) or (prev_seq is not None
+                                        and seq <= prev_seq):
+            raise ValueError(
+                f"history line {i}: seq {seq!r} is not a strictly "
+                f"ascending int (previous {prev_seq})")
+        if not isinstance(entry.get("backends"), dict):
+            raise ValueError(f"history line {i}: missing backends map")
+        prev_seq = seq
+        entries.append(entry)
+    return entries
+
+
+def rolling_best(entries: list, current: dict):
+    """Per-backend min us/iter over the history entries comparable to
+    `current`. Returns ``(best_map, n_comparable, n_skipped)``."""
+    best, n_comp, n_skip = {}, 0, 0
+    for entry in entries:
+        # history entries carry bench_history/v1, the artifact bench_sodda/v1
+        # — comparability is about WHAT was measured, so problem+iters only
+        if entry.get("problem") != current.get("problem") \
+                or entry.get("iters") != current.get("iters"):
+            n_skip += 1
+            continue
+        n_comp += 1
+        for name, us in entry["backends"].items():
+            us = float(us)
+            if us <= 0:
+                raise ValueError(
+                    f"history seq {entry['seq']}: backends[{name!r}] "
+                    f"us/iter must be positive, got {us}")
+            if name not in best or us < best[name][0]:
+                best[name] = (us, entry["seq"])
+    return best, n_comp, n_skip
+
+
+def history_entry(current: dict, seq: int, label: str, date: str) -> dict:
+    """The bench_history/v1 entry summarizing `current`."""
+    return {
+        "schema": HISTORY_SCHEMA, "seq": seq, "label": label, "date": date,
+        "problem": current["problem"], "iters": current["iters"],
+        "backends": {name: _metric(cell)
+                     for name, cell in current["backends"].items()},
+        **({"tuning": {"tuned_vs_default_us_ratio":
+                       current["tuning"]["tuned_vs_default_us_ratio"]}}
+           if current.get("tuning") else {}),
+    }
+
+
+def run_history_gate(args) -> int:
+    try:
+        entries = load_history(args.history)
+        current = load(args.current)
+        if not current.get("backends"):
+            print("INCOMPARABLE: current has no backends map "
+                  "(nothing to compare)")
+            return 3
+        if not entries:
+            print("INCOMPARABLE: history is empty (nothing to gate against)")
+            return 3
+        best, n_comp, n_skip = rolling_best(entries, current)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"ERROR: {type(e).__name__}: {e}")
+        return 2
+    if n_skip:
+        print(f"note: skipped {n_skip} history entries measuring a "
+              "different problem/iters")
+    if not n_comp:
+        print("INCOMPARABLE: no history entry measures the current "
+              "problem — seed the trajectory with --append first")
+        return 3
+
+    failed = False
+    print(f"{'backend':<20} {'best us/it':>12} {'cur us/it':>12} "
+          f"{'ratio':>7}  verdict (rolling best of {n_comp} entries)")
+    for name in sorted(current["backends"]):
+        c = _metric(current["backends"][name])
+        if name not in best:
+            print(f"{name:<20} {_fmt(None):>12} {_fmt(c):>12} "
+                  f"{_fmt(None, '.2f'):>7}  new")
+            continue
+        b, seq = best[name]
+        ratio = c / b
+        verdict = "REGRESSED" if ratio > 1.0 + args.threshold else "ok"
+        failed |= verdict == "REGRESSED"
+        print(f"{name:<20} {_fmt(b):>12} {_fmt(c):>12} "
+              f"{_fmt(ratio, '.2f'):>7}  {verdict} (seq {seq})")
+    status = "FAIL" if failed else "OK"
+    print(f"{status}: threshold +{args.threshold:.0%} on "
+          f"{_METRIC[0]}.{_METRIC[1]} vs rolling best of "
+          f"{args.history}")
+    if failed:
+        return 1
+    if args.append:
+        import datetime
+
+        date = args.date or datetime.date.today().isoformat()
+        entry = history_entry(current, entries[-1]["seq"] + 1,
+                              args.label, date)
+        with open(args.history, "a") as f:
+            f.write(json.dumps(entry, sort_keys=True) + "\n")
+        print(f"appended seq {entry['seq']} ({entry['label']}) to "
+              f"{args.history}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail on >threshold us/iter regression vs a baseline "
-                    "BENCH_sodda.json")
-    ap.add_argument("baseline")
+                    "BENCH_sodda.json (or, with --history, vs the rolling "
+                    "best of a bench_history/v1 trajectory)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="baseline BENCH_sodda.json (two-point mode only)")
     ap.add_argument("current")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional us/iter growth per backend "
                          "(default 0.25 = 25%%)")
+    ap.add_argument("--history", default=None, metavar="JSONL",
+                    help="gate against the rolling best of this "
+                         "bench_history/v1 trajectory instead of a "
+                         "baseline file")
+    ap.add_argument("--append", action="store_true",
+                    help="with --history: append the current artifact as "
+                         "the next trajectory entry after a passing gate")
+    ap.add_argument("--label", default="local",
+                    help="entry label for --append (e.g. the PR name)")
+    ap.add_argument("--date", default=None,
+                    help="entry date for --append (default: today)")
     try:
         args = ap.parse_args(argv)
     except SystemExit as e:
@@ -91,6 +243,19 @@ def main(argv=None) -> int:
         return 0 if not e.code else 2
     if args.threshold < 0:
         print(f"threshold must be >= 0, got {args.threshold}")
+        return 2
+    if args.history is not None:
+        if args.baseline is not None:
+            print("--history replaces the baseline positional; "
+                  "pass only the current artifact")
+            return 2
+        return run_history_gate(args)
+    if args.baseline is None:
+        print("two-point mode needs both baseline and current artifacts")
+        return 2
+    if args.append:
+        print("--append requires --history (the two-point baseline is the "
+              "committed artifact itself)")
         return 2
     try:
         baseline, current = load(args.baseline), load(args.current)

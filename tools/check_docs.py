@@ -13,17 +13,19 @@ silently-broken documentation behind:
     ``repro.core.driver.make_run``) — some prefix of at least two components
     must resolve to a module or package under ``src/``.
 
-It also checks the reverse direction for three API surfaces: every backend
+It also checks the reverse direction for four API surfaces: every backend
 registered in ``src/repro/core/engine.py`` must appear (backticked) in the
 ``docs/backends.md`` catalog, every data plane registered in
-``src/repro/data/plane.py`` must appear in ``docs/data.md``, and every
+``src/repro/data/plane.py`` must appear in ``docs/data.md``, every
 public supervisor/policy name defined in
 ``src/repro/distributed/fault_tolerance.py`` must appear in
-``docs/fault_tolerance.md`` — so none of them can land undocumented. The
-surfaces are read by scanning the sources for the
-``@register_backend("...")`` / ``@register_plane("...")`` decorations and
-top-level ``class``/``def`` statements — pure stdlib, no jax import — so
-the CI docs job stays dependency-free.
+``docs/fault_tolerance.md``, and every public name of the kernel-tuning
+module ``src/repro/kernels/tuning.py`` (``BlockConfig``, the legality
+checks, the autotuner) must appear in ``docs/kernels.md`` — so none of
+them can land undocumented. The surfaces are read by scanning the sources
+for the ``@register_backend("...")`` / ``@register_plane("...")``
+decorations and top-level ``class``/``def`` statements — pure stdlib, no
+jax import — so the CI docs job stays dependency-free.
 
 Exit status 0 when clean, 1 with one line per dangling reference:
 
@@ -260,6 +262,42 @@ def check_fault_tolerance_documented(root: str):
             for n in names if f"`{n}`" not in text]
 
 
+_TUNING_SRC = os.path.join("src", "repro", "kernels", "tuning.py")
+_KERNELS_DOC = os.path.join("docs", "kernels.md")
+
+
+def kernel_tuning_api(root: str):
+    """Public top-level names (classes + functions) of the kernel-tuning
+    module, by static scan — `BlockConfig`, the legality checks, and the
+    autotuner that ``docs/kernels.md`` documents. Underscore-prefixed
+    names are private and exempt; the scan is pinned against the runtime
+    module in ``tests/test_docs.py`` like the other three surfaces."""
+    path = os.path.join(root, _TUNING_SRC)
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        return sorted(set(_PUBLIC_DEF_RE.findall(f.read())))
+
+
+def check_kernel_tuning_documented(root: str):
+    """BlockConfig/tuning-API↔docs drift: every public name in
+    ``src/repro/kernels/tuning.py`` must appear backticked in
+    ``docs/kernels.md`` — a new knob or legality rule cannot land
+    undocumented, mirroring the backend/plane/fault-tolerance gates."""
+    names = kernel_tuning_api(root)
+    doc_path = os.path.join(root, _KERNELS_DOC)
+    if not names:
+        return []
+    if not os.path.isfile(doc_path):
+        return [f"{_KERNELS_DOC}: missing, but the kernel-tuning module "
+                f"defines {len(names)} public names"]
+    with open(doc_path) as f:
+        text = f.read()
+    return [f"{_KERNELS_DOC}: public tuning name `{n}` has no doc entry "
+            "(BlockConfig/tuning-API↔docs drift)"
+            for n in names if f"`{n}`" not in text]
+
+
 def check_tree(root: str):
     errors = []
     for md in _md_files(root):
@@ -267,6 +305,7 @@ def check_tree(root: str):
     errors.extend(check_registry_documented(root))
     errors.extend(check_planes_documented(root))
     errors.extend(check_fault_tolerance_documented(root))
+    errors.extend(check_kernel_tuning_documented(root))
     return errors
 
 
@@ -283,9 +322,11 @@ def main(argv=None) -> int:
     nb = len(registry_backends(root))
     np_ = len(registry_planes(root))
     nf = len(fault_tolerance_api(root))
+    nt = len(kernel_tuning_api(root))
     print(f"{'FAIL' if errors else 'OK'}: {n} markdown files + {nb} "
           f"registered backends + {np_} registered data planes + {nf} "
-          f"fault-tolerance names checked, {len(errors)} dangling references")
+          f"fault-tolerance names + {nt} kernel-tuning names checked, "
+          f"{len(errors)} dangling references")
     return 1 if errors else 0
 
 
