@@ -353,7 +353,7 @@ def bench_driver(iters: int = 240, reps: int = 3, out_path: str = None):
             with open(out_path) as f:
                 old = json.load(f)
             for block in ("large_problem", "streaming", "supervision",
-                          "tuning"):
+                          "tuning", "multihost", "multihost_large"):
                 if old.get(block) is not None:
                     payload[block] = old[block]
         except (ValueError, OSError):
@@ -772,6 +772,276 @@ def bench_tuning(reps: int = 5, out_path: str = None):
 
 
 # ---------------------------------------------------------------------------
+# Multi-process mesh cells: the SAME compiled programs on a mesh that spans
+# coordinated processes (repro.distributed.multihost + gloo CPU collectives),
+# so the psums cross a real inter-process boundary instead of being
+# single-host memcpys. Two cells: a 2-process smoke cell on the conformance
+# problem (the async-mesh vs shard_map ratio over real collectives — merged
+# as the ``multihost`` block, required by bench-smoke), and the TRUE paper
+# Table-1 250k x 18k cell on 5 processes x 3 devices with host-local tile
+# placement (merged as ``multihost_large``, opt-in like driver_large).
+# ---------------------------------------------------------------------------
+MULTIHOST_ITERS_DEFAULT = 24
+MULTIHOST_PROCESSES_DEFAULT = 2
+
+_MULTIHOST_SCRIPT = r"""
+import hashlib, json, resource, time, tracemalloc
+tracemalloc.start()
+import jax
+import jax.numpy as jnp
+from repro.core import driver, engine
+from repro.core.sodda import init_state
+from repro.data.plane import TiledDataPlane
+from repro.distributed import multihost
+from repro.testing import small_fixture_config
+
+ITERS, REPS = %(iters)d, %(reps)d
+cfg = small_fixture_config()
+plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q)
+mesh = engine.make_mesh_for(cfg)
+multihost.connect_mesh_collectives(mesh)
+X, y = plane.materialize_for("shard_map", mesh=mesh)
+key = jax.random.PRNGKey(1)
+out = {"process_index": multihost.process_index(), "backends": {}}
+for backend in ("shard_map", "async-mesh"):
+    compiled = driver.make_run(cfg, ITERS, backend, record_every=ITERS,
+                               mesh=mesh)
+    fresh = lambda b=backend: driver.place_initial_state(
+        init_state(jnp.array(key, copy=True), cfg.M), cfg, b, mesh)
+    final, fs = compiled(fresh(), X, y)
+    jax.block_until_ready((final, fs))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        final, fs = compiled(fresh(), X, y)
+        jax.block_until_ready((final, fs))
+    us = (time.perf_counter() - t0) / REPS / ITERS * 1e6
+    w = multihost.fetch_local(final.w)
+    out["backends"][backend] = {
+        "us_per_iter": us,
+        "w_sha256": hashlib.sha256(w.tobytes()).hexdigest()}
+out["peak_host_bytes"] = tracemalloc.get_traced_memory()[1]
+out["rss_peak_bytes"] = resource.getrusage(
+    resource.RUSAGE_SELF).ru_maxrss * 1024
+print(json.dumps(out))
+"""
+
+
+def run_multihost_cell(iters: int = MULTIHOST_ITERS_DEFAULT, reps: int = 3,
+                       num_processes: int = MULTIHOST_PROCESSES_DEFAULT,
+                       timeout: int = 1200):
+    """Run the 2-process smoke cell through the launch harness and return
+    the merged ``multihost`` block (see validate_bench)."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.testing import launch_coordinated
+    from repro.testing.fixtures import small_fixture_config
+
+    cfg = small_fixture_config()
+    if (cfg.P * cfg.Q) % num_processes:
+        raise ValueError(
+            f"{num_processes} processes cannot evenly split the "
+            f"{cfg.P}x{cfg.Q} device grid")
+    dpp = cfg.P * cfg.Q // num_processes
+    results = launch_coordinated(
+        _MULTIHOST_SCRIPT % {"iters": iters, "reps": reps},
+        num_processes, dpp, timeout=timeout)
+    bad = [r for r in results if r.returncode != 0]
+    if bad:
+        raise RuntimeError(
+            f"multihost cell rank failed:\n{bad[0].stderr[-2000:]}")
+    ranks = [json.loads(r.stdout.strip().splitlines()[-1]) for r in results]
+    lead = next(r for r in ranks if r["process_index"] == 0)
+    sums = {b: {r["backends"][b]["w_sha256"] for r in ranks}
+            for b in lead["backends"]}
+    block = {
+        "problem": {"name": cfg.name, "P": cfg.P, "Q": cfg.Q, "N": cfg.N,
+                    "M": cfg.M, "L": cfg.L, "loss": cfg.loss},
+        "plane": "tiled", "collectives": "gloo",
+        "num_processes": num_processes, "devices_per_process": dpp,
+        "iters": iters, "reps": reps,
+        "backends": {b: {"us_per_iter": c["us_per_iter"]}
+                     for b, c in lead["backends"].items()},
+        # every rank must finalize the same iterate — the cross-process
+        # agreement check the degeneracy tests enforce bitwise
+        "ranks_agree": all(len(s) == 1 for s in sums.values()),
+        "peak_host_bytes": max(r["peak_host_bytes"] for r in ranks),
+        "rss_peak_bytes": max(r["rss_peak_bytes"] for r in ranks),
+    }
+    sm = block["backends"].get("shard_map")
+    am = block["backends"].get("async-mesh")
+    if sm and am:
+        am["vs_shard_map_us_ratio"] = am["us_per_iter"] / sm["us_per_iter"]
+    return block
+
+
+def bench_multihost(iters: int = MULTIHOST_ITERS_DEFAULT, reps: int = 3,
+                    out_path: str = None):
+    """The 2-process mesh smoke cell, merged into BENCH_sodda.json as the
+    ``multihost`` block (fields documented in docs/benchmarks.md)."""
+    try:
+        block = run_multihost_cell(iters=iters, reps=reps)
+    except Exception as e:  # pragma: no cover - depends on host capacity
+        reason = (str(e).splitlines() or ["?"])[0][:120]
+        row("driver_multihost", 0.0, f"WARN ({type(e).__name__}: {reason})")
+        return None
+    am = block["backends"]["async-mesh"]
+    row("driver_multihost_shard_map",
+        block["backends"]["shard_map"]["us_per_iter"],
+        f"procs={block['num_processes']}x{block['devices_per_process']}dev "
+        f"ranks_agree={block['ranks_agree']}")
+    row("driver_multihost_async_mesh", am["us_per_iter"],
+        f"vs_shard_map={am['vs_shard_map_us_ratio']:.2f}x "
+        "(cross-process gloo collectives)")
+    out_path = out_path or BENCH_JSON
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+        payload["multihost"] = block
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        row("driver_multihost_json", 0.0, os.path.relpath(out_path))
+    else:
+        row("driver_multihost_json", 0.0,
+            f"WARN {os.path.relpath(out_path)} missing - run the driver "
+            "bench first to merge the multihost block")
+    return block
+
+
+MULTIHOST_LARGE_ITERS_DEFAULT = 2
+
+_MULTIHOST_LARGE_SCRIPT = r"""
+import faulthandler, json, resource, sys, time, tracemalloc
+tracemalloc.start()
+# hang watchdog: if any phase wedges, dump every thread's stack to stderr
+# (the harness surfaces stderr on kill) instead of dying silently
+faulthandler.dump_traceback_later(1800, repeat=True, exit=False)
+import jax
+import jax.numpy as jnp
+from repro.configs.sodda_svm import SoddaConfig
+from repro.core import driver, engine
+from repro.core.sodda import init_state
+from repro.data.plane import TiledDataPlane
+from repro.distributed import multihost
+
+_T0 = time.perf_counter()
+def stage(msg):  # progress marks on stderr: surfaced if the harness kills us
+    print(f"[{time.perf_counter() - _T0:8.1f}s] {msg}", file=sys.stderr,
+          flush=True)
+
+ITERS = %(iters)d
+# the paper's ACTUAL Table-1 instance: 250k x 18k on the 5x3 grid, one
+# process per data row-block (host-local tile placement: each host
+# generates and holds only its 1/P of the problem)
+cfg = SoddaConfig(name="sodda-table1-250kx18k", P=5, Q=3, n=50_000,
+                  m=6_000, L=64, lr0=0.01)
+plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q)
+mesh = engine.make_mesh_for(cfg)
+# establish every gloo channel NOW, while the ranks are still within
+# milliseconds of each other: entering a fresh communicator's rendezvous
+# minutes apart (generation time varies per rank) wedges the runtime
+multihost.connect_mesh_collectives(mesh)
+stage("collectives connected; materializing local tiles")
+X, y = plane.materialize_for("shard_map", mesh=mesh)
+jax.block_until_ready((X, y))
+multihost.barrier("tiles-placed")  # re-sync after the uneven generation
+stage("tiles placed; compiling + warming")
+compiled = driver.make_run(cfg, ITERS, "shard_map", record_every=ITERS,
+                           mesh=mesh)
+key = jax.random.PRNGKey(1)
+fresh = lambda: driver.place_initial_state(
+    init_state(jnp.array(key, copy=True), cfg.M), cfg, "shard_map", mesh)
+jax.block_until_ready(compiled(fresh(), X, y))  # compile + warm
+stage("warm dispatch done; timing")
+t0 = time.perf_counter()
+final, fs = compiled(fresh(), X, y)
+jax.block_until_ready((final, fs))
+us = (time.perf_counter() - t0) / ITERS * 1e6
+stage("timed dispatch done")
+print(json.dumps({
+    "process_index": multihost.process_index(),
+    "us_per_iter": us,
+    "loss_t0": float(multihost.fetch_local(fs)[0]),
+    "peak_host_bytes": tracemalloc.get_traced_memory()[1],
+    "rss_peak_bytes": resource.getrusage(
+        resource.RUSAGE_SELF).ru_maxrss * 1024,
+    "dense_xy_bytes": plane.dense_nbytes,
+}))
+"""
+
+
+def run_multihost_large_cell(iters: int = MULTIHOST_LARGE_ITERS_DEFAULT,
+                             timeout: int = 5400):
+    """Run the 250k x 18k Table-1 cell on 5 coordinated processes (3 devices
+    each) and return the ``multihost_large`` block (see validate_bench)."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.testing import launch_coordinated
+
+    P, Q = 5, 3
+    results = launch_coordinated(
+        _MULTIHOST_LARGE_SCRIPT % {"iters": iters}, P, Q, timeout=timeout)
+    bad = [r for r in results if r.returncode != 0]
+    if bad:
+        raise RuntimeError(
+            f"multihost large cell rank failed:\n{bad[0].stderr[-2000:]}")
+    ranks = [json.loads(r.stdout.strip().splitlines()[-1]) for r in results]
+    lead = next(r for r in ranks if r["process_index"] == 0)
+    dense = lead["dense_xy_bytes"]
+    return {
+        "problem": {"name": "sodda-table1-250kx18k", "P": P, "Q": Q,
+                    "N": 250_000, "M": 18_000, "L": 64, "loss": "hinge"},
+        "backend": "shard_map", "plane": "tiled", "collectives": "gloo",
+        "num_processes": P, "devices_per_process": Q,
+        "iters": iters, "us_per_iter": lead["us_per_iter"],
+        "loss_t0": lead["loss_t0"],
+        # host-local placement claim: NO host ever stages anything close to
+        # the dense (N, M) footprint — each holds ~1/num_processes of it
+        "peak_host_bytes": max(r["peak_host_bytes"] for r in ranks),
+        "rss_peak_bytes": max(r["rss_peak_bytes"] for r in ranks),
+        "dense_xy_bytes": dense,
+        "per_host_peak_host_bytes": [
+            r["peak_host_bytes"]
+            for r in sorted(ranks, key=lambda r: r["process_index"])],
+    }
+
+
+def bench_multihost_large(iters: int = MULTIHOST_LARGE_ITERS_DEFAULT,
+                          out_path: str = None, force: bool = False):
+    """The paper-scale 250k x 18k multi-process cell, merged into
+    BENCH_sodda.json as the ``multihost_large`` block. Opt-in like
+    driver_large: it moves ~18 GB of tiles across 5 processes."""
+    if not (force or os.environ.get("RUN_LARGE_BENCH")):
+        row("driver_multihost_large", 0.0,
+            "SKIP (opt-in: RUN_LARGE_BENCH=1 or --only multihost_large)")
+        return None
+    try:
+        block = run_multihost_large_cell(iters=iters)
+    except Exception as e:  # pragma: no cover - depends on host capacity
+        reason = (str(e).splitlines() or ["?"])[0][:120]
+        row("driver_multihost_large", 0.0,
+            f"WARN ({type(e).__name__}: {reason})")
+        return None
+    row("driver_multihost_large_scan", block["us_per_iter"],
+        f"N={block['problem']['N']} M={block['problem']['M']} "
+        f"procs={block['num_processes']}x{block['devices_per_process']}dev "
+        f"peak_host_mb={block['peak_host_bytes']/1e6:.1f} "
+        f"dense_mb={block['dense_xy_bytes']/1e6:.1f}")
+    out_path = out_path or BENCH_JSON
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+        payload["multihost_large"] = block
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        row("driver_multihost_large_json", 0.0, os.path.relpath(out_path))
+    else:
+        row("driver_multihost_large_json", 0.0,
+            f"WARN {os.path.relpath(out_path)} missing - run the driver "
+            "bench first to merge the multihost_large block")
+    return block
+
+
+# ---------------------------------------------------------------------------
 # Roofline summary from the dry-run results (reads results/dryrun.json)
 # ---------------------------------------------------------------------------
 def bench_roofline_summary():
@@ -801,6 +1071,8 @@ BENCHES = {
     "streaming": bench_streaming,
     "supervision": bench_supervision,
     "tuning": bench_tuning,
+    "multihost": bench_multihost,
+    "multihost_large": bench_multihost_large,
     "distributed_sodda": bench_distributed_sodda,
     "roofline_summary": bench_roofline_summary,
 }
@@ -822,6 +1094,9 @@ def main(argv=None) -> None:
         if name == "driver_large":
             # explicit selection overrides the opt-in gate
             bench_driver_large(force=args.only == "driver_large")
+            continue
+        if name == "multihost_large":
+            bench_multihost_large(force=args.only == "multihost_large")
             continue
         fn()
 

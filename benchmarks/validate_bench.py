@@ -19,6 +19,9 @@ rely on the shape without re-deriving it from the writer.
     # ...and/or the kernel-autotuning cell:
     PYTHONPATH=src python -m benchmarks.validate_bench \
         results/BENCH_sodda.json --require-tuning
+    # ...and/or the 2-process mesh cell:
+    PYTHONPATH=src python -m benchmarks.validate_bench \
+        results/BENCH_sodda.json --require-multihost
     # validate the per-PR bench trajectory instead (bench_history/v1 JSONL):
     PYTHONPATH=src python -m benchmarks.validate_bench \
         --history results/BENCH_history.jsonl
@@ -129,6 +132,12 @@ def validate(payload: dict) -> dict:
     tn = payload.get("tuning")
     if tn is not None:
         _check_tuning(tn)
+    mh = payload.get("multihost")
+    if mh is not None:
+        _check_multihost(mh)
+    ml = payload.get("multihost_large")
+    if ml is not None:
+        _check_multihost_large(ml)
     return payload
 
 
@@ -341,6 +350,106 @@ def _check_tuning(tn):
               f"autotuner never regresses the default), got {r!r}")
 
 
+def _check_multihost_common(mh, ctx):
+    """Shared topology/footprint checks of the two multi-process cells."""
+    if not isinstance(mh, dict):
+        _fail(f"{ctx}: must be an object")
+    problem = mh.get("problem")
+    if not isinstance(problem, dict):
+        _fail(f"{ctx}.problem: missing object")
+    for k, ty in _PROBLEM_KEYS.items():
+        if not isinstance(problem.get(k), ty):
+            _fail(f"{ctx}.problem.{k} must be {ty.__name__}, "
+                  f"got {problem.get(k)!r}")
+    if mh.get("plane") != "tiled":
+        _fail(f"{ctx}.plane must be 'tiled' (host-local tile placement is "
+              f"the cell's point), got {mh.get('plane')!r}")
+    for k in ("num_processes", "devices_per_process", "iters"):
+        v = mh.get(k)
+        if not isinstance(v, int) or v < 1:
+            _fail(f"{ctx}.{k} must be a positive int, got {v!r}")
+    if mh["num_processes"] < 2:
+        _fail(f"{ctx}.num_processes must be >= 2 — a single process is not "
+              f"a multi-process cell, got {mh['num_processes']}")
+    if mh["num_processes"] * mh["devices_per_process"] != \
+            problem["P"] * problem["Q"]:
+        _fail(f"{ctx}: num_processes x devices_per_process "
+              f"({mh['num_processes']} x {mh['devices_per_process']}) must "
+              f"equal the P x Q device grid "
+              f"({problem['P']} x {problem['Q']})")
+    for k in ("peak_host_bytes", "rss_peak_bytes"):
+        v = mh.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            _fail(f"{ctx}.{k} must be a non-negative number, got {v!r}")
+
+
+def _check_multihost(mh):
+    """The optional 2-process mesh smoke cell (bench_multihost).
+
+    The same compiled mesh programs dispatched from coordinated processes
+    (gloo CPU collectives): both mesh backends' us/iter over a REAL
+    inter-process psum, the async-mesh cell's ``vs_shard_map_us_ratio``
+    against the synchronous baseline in that regime, and the cross-rank
+    final-iterate agreement flag the degeneracy tests enforce bitwise.
+    """
+    ctx = "multihost"
+    _check_multihost_common(mh, ctx)
+    backends = mh.get("backends")
+    if not isinstance(backends, dict) or \
+            not {"shard_map", "async-mesh"} <= set(backends):
+        _fail(f"{ctx}.backends must contain the shard_map and async-mesh "
+              f"cells, got "
+              f"{sorted(backends) if isinstance(backends, dict) else backends!r}")
+    for name, c in backends.items():
+        us = c.get("us_per_iter") if isinstance(c, dict) else None
+        if not isinstance(us, (int, float)) or us <= 0:
+            _fail(f"{ctx}.backends[{name!r}].us_per_iter must be positive, "
+                  f"got {us!r}")
+    am = backends["async-mesh"]
+    vr = am.get("vs_shard_map_us_ratio")
+    if not isinstance(vr, (int, float)) or vr <= 0:
+        _fail(f"{ctx}.backends['async-mesh'].vs_shard_map_us_ratio must be "
+              f"positive, got {vr!r}")
+    implied = am["us_per_iter"] / backends["shard_map"]["us_per_iter"]
+    if abs(vr - implied) > 1e-6 * implied:
+        _fail(f"{ctx}.backends['async-mesh'].vs_shard_map_us_ratio ({vr}) "
+              f"is not async-mesh/shard_map ({implied})")
+    if mh.get("ranks_agree") is not True:
+        _fail(f"{ctx}.ranks_agree must be true — the processes disagreed "
+              "on the final iterate, the run is broken")
+
+
+def _check_multihost_large(ml):
+    """The optional paper-scale multi-process cell (bench_multihost_large).
+
+    The TRUE Table-1 instance (250k x 18k) with host-local tile placement:
+    every process generates only its own row-block of tiles, so the
+    per-host staging peak must come in below the dense ``(N, M)``
+    footprint a single-host (or dense-plane) run would have paid.
+    """
+    ctx = "multihost_large"
+    _check_multihost_common(ml, ctx)
+    if not isinstance(ml.get("backend"), str):
+        _fail(f"{ctx}.backend must be a string, got {ml.get('backend')!r}")
+    for k in ("us_per_iter", "dense_xy_bytes"):
+        v = ml.get(k)
+        if not isinstance(v, (int, float)) or v <= 0:
+            _fail(f"{ctx}.{k} must be positive, got {v!r}")
+    per_host = ml.get("per_host_peak_host_bytes")
+    if not isinstance(per_host, list) or \
+            len(per_host) != ml["num_processes"] or \
+            any(not isinstance(v, (int, float)) or v < 0 for v in per_host):
+        _fail(f"{ctx}.per_host_peak_host_bytes must list one non-negative "
+              f"peak per process, got {per_host!r}")
+    if max(per_host) != ml["peak_host_bytes"]:
+        _fail(f"{ctx}.peak_host_bytes ({ml['peak_host_bytes']}) must be "
+              f"the max over per_host_peak_host_bytes ({per_host})")
+    if ml["peak_host_bytes"] >= ml["dense_xy_bytes"]:
+        _fail(f"{ctx}: peak_host_bytes ({ml['peak_host_bytes']}) must be "
+              f"below the dense footprint ({ml['dense_xy_bytes']}) — the "
+              "host-local placement acceptance criterion")
+
+
 def validate_history_entry(entry, prev_seq=None, ctx="history"):
     """Validate one bench_history/v1 entry; returns its seq."""
     if not isinstance(entry, dict):
@@ -416,6 +525,7 @@ def main(argv=None) -> int:
         return 0
     paths, required = [], []
     require_streaming = require_supervision = require_tuning = False
+    require_multihost = False
     history_mode = False
     it = iter(argv)
     for a in it:
@@ -427,6 +537,8 @@ def main(argv=None) -> int:
             require_supervision = True
         elif a == "--require-tuning":
             require_tuning = True
+        elif a == "--require-multihost":
+            require_multihost = True
         elif a == "--history":
             history_mode = True
         else:
@@ -436,7 +548,7 @@ def main(argv=None) -> int:
         return 2
     if history_mode:
         if required or require_streaming or require_supervision \
-                or require_tuning:
+                or require_tuning or require_multihost:
             print(__doc__)
             return 2
         with open(paths[0]) as f:
@@ -462,6 +574,10 @@ def main(argv=None) -> int:
     if require_tuning and payload.get("tuning") is None:
         print(f"FAIL {paths[0]}: required tuning cell missing "
               "(run benchmarks.run --only tuning to produce it)")
+        return 1
+    if require_multihost and payload.get("multihost") is None:
+        print(f"FAIL {paths[0]}: required multihost cell missing "
+              "(run benchmarks.run --only multihost to produce it)")
         return 1
     n = len(payload["backends"])
     ref = payload["backends"].get("reference", {})

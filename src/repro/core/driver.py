@@ -203,10 +203,12 @@ def place_initial_state(state, cfg: SoddaConfig, backend: str, mesh=None):
     mesh = mesh if mesh is not None else engine.make_mesh_for(cfg)
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.multihost import put_sharded
     return type(state)(
-        w=jax.device_put(state.w, NamedSharding(mesh, P("model"))),
-        t=jax.device_put(state.t, NamedSharding(mesh, P())),
-        key=jax.device_put(state.key, NamedSharding(mesh, P())))
+        w=put_sharded(state.w, NamedSharding(mesh, P("model"))),
+        t=put_sharded(state.t, NamedSharding(mesh, P())),
+        key=put_sharded(state.key, NamedSharding(mesh, P())))
 
 
 def _checked_bundle(data, cfg: SoddaConfig, backend: str, mesh, options):
@@ -255,8 +257,10 @@ def run(key, data, cfg: SoddaConfig, iters: int, backend: str = "reference",
     state = place_initial_state(init_state(jnp.array(key, copy=True), cfg.M),
                                 cfg, backend, mesh)
     state, fs = compiled(state, X, y)
+    from repro.distributed.multihost import fetch_local
     hist = [(t, float(f))
-            for t, f in zip(record_ticks(iters, record_every), np.asarray(fs))]
+            for t, f in zip(record_ticks(iters, record_every),
+                            fetch_local(fs))]
     return state, hist
 
 
@@ -504,7 +508,7 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                   segment_iters: int, record_every: int = 1, mesh=None,
                   keep: int = 3, commit_every: int = 0, on_commit=None,
                   on_segment=None, on_segment_start=None,
-                  stream_stats=None, **options):
+                  stream_stats=None, prefetch_depth: int = 1, **options):
     """:func:`run` split into checkpointed segments (ROADMAP "Driver-level
     checkpointing", the host-side version: chunk boundary = preemption
     point).
@@ -541,6 +545,10 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
     ``stream_stats`` to receive the prefetcher's overlap accounting
     (``overlap_ratio``, ``place_s``, ``wait_s``, ...) and the plane's tile
     cache counters after the run; ignored for static planes.
+    ``prefetch_depth`` widens the prefetch window: up to that many future
+    epochs are queued on the placement thread at once (default 1 — the
+    classic double buffer, bitwise the historical behavior; the trained
+    trajectory never depends on depth, only residency/overlap do).
 
     ``commit_every > 0`` makes the *segment itself* preemptible: the
     compiled program additionally commits the carry every ``commit_every``
@@ -565,8 +573,19 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
         read_extra, restore_checkpoint
     from repro.core.sodda import init_state
     from repro.data.plane import StreamPrefetcher
+    from repro.distributed import multihost
 
     _validate_segmenting(iters, segment_iters, record_every, commit_every)
+    if commit_every and jax.process_count() > 1:
+        # the io_callback commit sink runs on each process's runtime
+        # callback thread with no cross-process ordering; a mid-scan commit
+        # could interleave with another host's and tear the checkpoint.
+        # Segment boundaries (host-side, collectively fetched,
+        # coordinator-written) are the multi-process preemption points.
+        raise ValueError(
+            "commit_every > 0 (in-scan commits) is not supported under a "
+            "multi-process runtime; use commit_every=0 — segment "
+            "boundaries are the preemption points")
 
     opt_key = tuple(sorted(options.items()))
     plane, bundle = _checked_bundle(data, cfg, backend, mesh, opt_key)
@@ -576,7 +595,8 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
     prefetch = None
     if plane.is_streaming:
         prefetch = StreamPrefetcher(
-            lambda e: bundle.place_data(plane, epoch=e))
+            lambda e: bundle.place_data(plane, epoch=e),
+            depth=prefetch_depth)
 
     def stamp(done_now, hist_now):
         extra = {"history": [[t, f] for t, f in hist_now],
@@ -689,7 +709,8 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                     "written; refusing to resume")
             done, restored, extra = restore_checkpoint(checkpoint_dir, carry)
             carry = jax.tree.map(
-                lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+                lambda leaf, proto: multihost.put_sharded(
+                    leaf, proto.sharding),
                 restored, carry)
             hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
 
@@ -703,11 +724,15 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
             if prefetch is not None:
                 # consume this segment's window (already resident unless
                 # this is the first segment after a cold start/resume),
-                # then issue the next one so it generates and lands on
-                # device underneath this segment's compiled dispatch
-                X, y = prefetch.consume(done // segment_iters)
-                if done + seg < iters:
-                    prefetch.issue(done // segment_iters + 1)
+                # then issue the next prefetch_depth windows so they
+                # generate and land on device underneath this segment's
+                # compiled dispatch (the prefetcher bounds the queue)
+                epoch = done // segment_iters
+                X, y = prefetch.consume(epoch)
+                last_epoch = (iters - 1) // segment_iters
+                for ahead in range(1, prefetch.depth + 1):
+                    if epoch + ahead <= last_epoch:
+                        prefetch.issue(epoch + ahead)
             compiled = _cached_segment_run(cfg, seg, backend, record_every,
                                            mesh, opt_key, commit_every)
             if commit_every:
@@ -729,9 +754,18 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                 carry, fs = compiled(carry, X, y)
             hist += [(done + t, float(f))
                      for t, f in zip(range(0, seg, record_every),
-                                     np.asarray(fs))]
+                                     multihost.fetch_local(fs))]
             done += seg
-            manager.maybe_save(done, carry, extra=stamp(done, hist))
+            if jax.process_count() > 1:
+                # the host fetch is a collective (every process replicates
+                # the carry in the same order); only the coordinator then
+                # touches the filesystem — one writer, N readers on resume
+                host_carry = jax.tree.map(multihost.fetch_local, carry)
+                if multihost.is_coordinator():
+                    manager.maybe_save(done, host_carry,
+                                       extra=stamp(done, hist))
+            else:
+                manager.maybe_save(done, carry, extra=stamp(done, hist))
             if on_segment is not None:
                 on_segment(done)
 
@@ -745,8 +779,8 @@ def run_resumable(key, data, cfg: SoddaConfig, iters: int,
                 stream_stats.update(prefetch.stats())
                 stream_stats["cache"] = plane.cache_stats
         final = bundle.finalize(carry)
-        hist.append((iters,
-                     float(_cached_objective(cfg.loss)(X, y, final.w))))
+        hist.append((iters, float(multihost.fetch_local(
+            _cached_objective(cfg.loss)(X, y, final.w)))))
         return final, hist
     finally:
         if prefetch is not None:
@@ -797,7 +831,14 @@ def migrate_resumable(key, data, cfg: SoddaConfig, done: int, state,
              "key": _key_stamp(key)}
     if plane.is_streaming:
         extra["stream_epoch"] = done // segment_iters
-    save_checkpoint(checkpoint_dir, done, carry, extra=extra, keep=keep)
+    if jax.process_count() > 1:
+        from repro.distributed import multihost
+        host_carry = jax.tree.map(multihost.fetch_local, carry)
+        if multihost.is_coordinator():
+            save_checkpoint(checkpoint_dir, done, host_carry, extra=extra,
+                            keep=keep)
+    else:
+        save_checkpoint(checkpoint_dir, done, carry, extra=extra, keep=keep)
     return carry
 
 
@@ -828,8 +869,9 @@ def restore_resumable_state(key, data, cfg: SoddaConfig,
     template = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
     done, restored, extra = restore_checkpoint(checkpoint_dir, template,
                                                step=step)
+    from repro.distributed import multihost
     carry = jax.tree.map(
-        lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+        lambda leaf, proto: multihost.put_sharded(leaf, proto.sharding),
         restored, template)
     hist = [(int(t), float(f)) for t, f in extra.get("history", [])]
     return done, bundle.finalize(carry), hist
@@ -887,16 +929,17 @@ def replay_segment(key, data, cfg: SoddaConfig, backend: str = "reference",
     state0 = place_initial_state(
         init_state(jnp.array(key, copy=True), cfg.M), cfg, backend, mesh)
     template = _cached_init_carry(cfg, backend, mesh, opt_key)(state0, X, y)
+    from repro.distributed import multihost
     _, restored, _ = restore_checkpoint(checkpoint_dir, template, step=start)
     carry = jax.tree.map(
-        lambda leaf, proto: jax.device_put(leaf, proto.sharding),
+        lambda leaf, proto: multihost.put_sharded(leaf, proto.sharding),
         restored, template)
     compiled = _cached_segment_run(cfg, end - start, backend, record_every,
                                    mesh, opt_key)
     carry, _ = compiled(carry, X, y)
     _, committed, _ = restore_checkpoint(checkpoint_dir, template, step=end)
     match = all(
-        np.array_equal(np.asarray(a), np.asarray(b))
+        np.array_equal(multihost.fetch_local(a), np.asarray(b))
         for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(committed)))
     report.update(replayed=True, match=bool(match))
     return report

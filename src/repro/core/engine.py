@@ -232,12 +232,20 @@ def available_backends():
 
 
 def make_mesh_for(cfg: SoddaConfig):
-    """A (data=P, model=Q) mesh over the local devices for `cfg`'s grid."""
+    """A (data=P, model=Q) mesh over the *global* device set for `cfg`'s grid.
+
+    In a multi-process runtime (``repro.distributed.multihost``) the mesh
+    spans every process's devices — ``jax.devices()``, process-major order,
+    so each process's addressable devices tile contiguous mesh positions
+    (the host-local placement contract of ``DataPlane``). Single-process,
+    global == local and this is the mesh the seed tests always built.
+    """
     need = cfg.P * cfg.Q
-    have = jax.local_device_count()
+    have = jax.device_count()
     if have < need:
         raise ValueError(
             f"cfg grid {cfg.P}x{cfg.Q} needs {need} devices, have {have} "
+            f"across {jax.process_count()} process(es) "
             "(force more with --xla_force_host_platform_device_count)")
     return jax.make_mesh((cfg.P, cfg.Q), ("data", "model"))
 

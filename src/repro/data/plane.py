@@ -249,8 +249,20 @@ class DataPlane(abc.ABC):
                 "match the grids to keep per-tile placement",
                 stacklevel=3)
             X, y = self.materialize()
-            return (jax.device_put(X, x_sharding),
-                    jax.device_put(y, y_sharding))
+            from repro.distributed.multihost import put_sharded
+            return (put_sharded(X, x_sharding),
+                    put_sharded(y, y_sharding))
+        if jax.process_count() > 1:
+            return self._materialize_mesh_process_local(
+                x_sharding, y_sharding)
+        return self._materialize_per_device(x_sharding, y_sharding)
+
+    def _materialize_per_device(self, x_sharding, y_sharding):
+        """Per-device placement: generate each addressable device's tile
+        and assemble with ``make_array_from_single_device_arrays``. Needs
+        no contiguity across the addressable shard set — the single-process
+        path, and the multi-process fallback when this process's devices do
+        not cover a contiguous rectangle (an exotic device permutation)."""
         x_parts, y_parts = [], []
         y_cache = {}  # one y_block(p) per row, shared by the row's Q devices
         index_map = x_sharding.addressable_devices_indices_map((self.N,
@@ -266,6 +278,45 @@ class DataPlane(abc.ABC):
             (self.N, self.M), x_sharding, x_parts)
         y = jax.make_array_from_single_device_arrays(
             (self.N,), y_sharding, y_parts)
+        return X, y
+
+    def _materialize_mesh_process_local(self, x_sharding, y_sharding):
+        """Multi-process placement: this process generates ONLY the tiles
+        its addressable devices hold and hands the assembled host-local
+        block to ``jax.make_array_from_process_local_data`` — no host ever
+        materializes the global ``(N, M)`` array (the multihost half of
+        the tiled plane's memory model; see ``docs/multihost.md``).
+
+        Relies on host-local tile placement: the mesh is built from the
+        process-major global device order, so each process's devices cover
+        a contiguous rectangle of tiles
+        (``repro.distributed.multihost.local_device_slice``). When they do
+        not (an exotic device permutation), falls back to per-device
+        placement, which needs no contiguity.
+        """
+        from repro.distributed.multihost import local_device_slice
+        try:
+            rows, cols = local_device_slice(x_sharding, (self.N, self.M))
+        except ValueError:
+            return self._materialize_per_device(x_sharding, y_sharding)
+        if rows.start % self.n or rows.stop % self.n \
+                or cols.start % self.m or cols.stop % self.m:
+            raise ValueError(
+                f"process-local slice rows={rows} cols={cols} is not "
+                f"tile-aligned to the ({self.n}, {self.m}) tile shape — "
+                "the mesh grid must match the plane's (P, Q) tile grid")
+        p0, p1 = rows.start // self.n, rows.stop // self.n
+        q0, q1 = cols.start // self.m, cols.stop // self.m
+        x_local = np.concatenate(
+            [np.concatenate([np.asarray(self.x_tile(p, q))
+                             for q in range(q0, q1)], axis=1)
+             for p in range(p0, p1)], axis=0)
+        y_local = np.concatenate(
+            [np.asarray(self.y_block(p)) for p in range(p0, p1)])
+        X = jax.make_array_from_process_local_data(x_sharding, x_local,
+                                                   (self.N, self.M))
+        y = jax.make_array_from_process_local_data(y_sharding, y_local,
+                                                   (self.N,))
         return X, y
 
 
@@ -321,6 +372,12 @@ class DenseDataPlane(DataPlane):
     def _materialize_mesh(self, mesh):
         from repro.core.distributed import data_shardings
         x_sharding, y_sharding = data_shardings(mesh)
+        if jax.process_count() > 1:
+            # every process holds the full host array (this plane's whole
+            # point); each just places its own addressable shards
+            from repro.distributed.multihost import put_sharded
+            return (put_sharded(self._X, x_sharding),
+                    put_sharded(self._y, y_sharding))
         return (jax.device_put(self._X, x_sharding),
                 jax.device_put(self._y, y_sharding))
 
@@ -517,26 +574,45 @@ class StreamPrefetcher:
     ``1 - wait_s / place_s``: the fraction of placement wall-time hidden
     behind compute (1.0 = every consume found its window already resident,
     0.0 = fully synchronous cold loads).
+
+    ``depth`` bounds the *issue queue*: at most ``depth`` windows beyond
+    the newest consumed epoch may be scheduled at once — :meth:`issue`
+    beyond the bound is a silent no-op (the caller just re-issues after
+    the next consume). ``depth=1`` is the classic double buffer and is
+    bitwise the historical behavior; deeper queues absorb placement-time
+    jitter across segments at the cost of one extra resident window each.
+    The observed maximum lookahead is reported as ``queue_high_water``.
     """
 
-    def __init__(self, place):
+    def __init__(self, place, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         self._place = place
+        self.depth = int(depth)
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="stream-prefetch")
         self._pending: Dict[int, object] = {}  # epoch -> Future
+        self._last_consumed = -1  # newest consumed epoch; -1 = none yet
         self._closed = False
         self._lock = threading.Lock()
         self.place_s = 0.0   # worker wall-time spent generating + placing
         self.wait_s = 0.0    # consumer wall-time blocked on a window
         self.consumed = 0
         self.cold_misses = 0  # consume() of a never-issued epoch
+        self.queue_high_water = 0  # max lookahead windows ever in flight
 
     def issue(self, epoch: int):
-        """Schedule epoch's window on the worker thread (idempotent)."""
+        """Schedule epoch's window on the worker thread (idempotent; a
+        no-op when ``depth`` windows are already queued past the newest
+        consumed epoch — the bounded issue queue)."""
         with self._lock:
             if epoch in self._pending:
                 return
+            ahead = sum(1 for e in self._pending if e > self._last_consumed)
+            if ahead >= self.depth:
+                return
             self._pending[epoch] = self._pool.submit(self._job, epoch)
+            self.queue_high_water = max(self.queue_high_water, ahead + 1)
 
     def _job(self, epoch: int):
         t0 = time.perf_counter()
@@ -548,16 +624,18 @@ class StreamPrefetcher:
         """The placed ``(X, y)`` of `epoch`; blocks if still in flight."""
         with self._lock:
             fut = self._pending.get(epoch)
-        if fut is None:
-            self.cold_misses += 1
-            self.issue(epoch)
-            with self._lock:
-                fut = self._pending[epoch]
+            if fut is None:
+                # cold miss: schedule directly, bypassing the depth bound
+                # (the consumer needs this window no matter what's queued)
+                self.cold_misses += 1
+                fut = self._pending[epoch] = self._pool.submit(
+                    self._job, epoch)
         t0 = time.perf_counter()
         out = fut.result()
         self.wait_s += time.perf_counter() - t0
         self.consumed += 1
         with self._lock:  # retire strictly older windows (double buffer)
+            self._last_consumed = max(self._last_consumed, epoch)
             for e in [e for e in self._pending if e < epoch]:
                 del self._pending[e]
         return out
@@ -572,7 +650,8 @@ class StreamPrefetcher:
     def stats(self) -> Dict[str, float]:
         return {"place_s": self.place_s, "wait_s": self.wait_s,
                 "consumed": self.consumed, "cold_misses": self.cold_misses,
-                "overlap_ratio": self.overlap_ratio}
+                "overlap_ratio": self.overlap_ratio, "depth": self.depth,
+                "queue_high_water": self.queue_high_water}
 
     @property
     def closed(self) -> bool:

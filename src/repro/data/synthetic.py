@@ -40,9 +40,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-# exact unit-variance scale for U[-1, 1] (std = 1/sqrt(3)), in f32
-SVM_UNIT_VARIANCE_SCALE = jnp.float32(1.7320508075688772)
+# exact unit-variance scale for U[-1, 1] (std = 1/sqrt(3)), in f32.
+# A numpy scalar, NOT jnp: building a jax value here would start the
+# backend at import time, before repro.distributed.multihost.initialize
+# can join a multi-process runtime (same strong f32 promotion either way).
+SVM_UNIT_VARIANCE_SCALE = np.float32(1.7320508075688772)
 
 
 def make_svm_data(key, N: int, M: int, flip_prob: float = 0.01, standardize: bool = True):

@@ -10,6 +10,7 @@ from repro.distributed.fault_tolerance import (
     run_elastic,
     run_elastic_auto,
     shrink_plane,
+    suggest_commit_every,
 )
 from repro.distributed.sharding_rules import (
     activation_pspec_fn,
@@ -34,4 +35,5 @@ __all__ = [
     "regrow_plane",
     "run_elastic",
     "run_elastic_auto",
+    "suggest_commit_every",
 ]

@@ -797,3 +797,47 @@ def run_elastic_auto(key, data, cfg, iters: int, backend: str = "reference",
               "moved_rows": moved, "new_cfg": new_cfg,
               "survivors": survivors, "events": list(sup.events)}
     return state, hist, report
+
+
+def suggest_commit_every(supervision: dict, *, max_overhead: float = 0.25,
+                         segment_iters: Optional[int] = None,
+                         record_every: Optional[int] = None) -> int:
+    """Derive a ``commit_every`` cadence from a measured supervision cell.
+
+    ``supervision`` is the bench driver's supervision block
+    (``results/BENCH_sodda.json["supervision"]``): its
+    ``in_scan_commit_overhead_ratio`` is the per-iteration slowdown the
+    in-scan commit path measured at the ``commit_every_small`` cell's
+    cadence ``c0``. Commits cost a fixed amount each, so in bare-iteration
+    units one commit costs ``k = (ratio - 1) * c0`` and a run at cadence
+    ``c`` pays overhead ``k / c``. This picks the **smallest** cadence —
+    the least work lost to a mid-segment kill — whose modeled overhead
+    stays within ``max_overhead``, among the legal cadences (multiples of
+    ``record_every`` that divide ``segment_iters``, both defaulted from
+    the block's own stamps). Returns ``0`` — boundary-only commits — when
+    no legal cadence is cheap enough (or ``max_overhead <= 0``): paying
+    more than the budget on every iteration is worse than losing a
+    segment on the rare kill.
+    """
+    if max_overhead <= 0:
+        return 0
+    seg = int(segment_iters if segment_iters is not None
+              else supervision["segment_iters"])
+    rec = int(record_every if record_every is not None
+              else supervision["record_every"])
+    if seg < 1 or rec < 1 or seg % rec:
+        raise ValueError(
+            f"record_every={rec} must be >= 1 and divide "
+            f"segment_iters={seg}")
+    ratio = float(supervision["in_scan_commit_overhead_ratio"])
+    c0 = int(supervision["cells"]["commit_every_small"]["commit_every"])
+    if c0 < 1:
+        raise ValueError(
+            f"commit_every_small cell measured cadence {c0}; need >= 1")
+    # per-commit cost in bare-iteration units; measurement noise can put
+    # the ratio under 1.0, which just means commits are free here
+    k = max(0.0, ratio - 1.0) * c0
+    for cadence in range(rec, seg + 1, rec):
+        if seg % cadence == 0 and k <= max_overhead * cadence:
+            return cadence
+    return 0

@@ -21,6 +21,8 @@ from repro.testing.fixtures import (CONFORMANCE_ITERS, make_data_plane,
                                     small_fixture_config)
 from repro.testing.invariants import (assert_samples_equal,
                                       check_iteration_sample)
+from repro.testing.multiprocess import (free_coordinator_address,
+                                        launch_coordinated)
 from repro.testing.tolerances import (BITWISE, F32_REDUCTION, QUANTIZED,
                                       STALENESS, TolerancePolicy,
                                       assert_objectives_close,
@@ -33,6 +35,8 @@ __all__ = [
     "require_host_devices",
     "run_forced_subprocess",
     "sodda_test_mesh",
+    "free_coordinator_address",
+    "launch_coordinated",
     "CONFORMANCE_ITERS",
     "assert_samples_equal",
     "check_iteration_sample",

@@ -1,0 +1,142 @@
+"""N-process CPU launch harness for the multihost tests and benches.
+
+``repro.distributed.multihost`` turns coordinated processes into one
+global mesh runtime; this module spawns those processes. Each child is a
+fresh interpreter that (before importing jax) forces its own host device
+count, exports the ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` /
+``REPRO_PROCESS_ID`` rendezvous variables, and calls
+``multihost.initialize()`` — so the caller's `script` starts with the
+distributed runtime already up and ``jax.devices()`` spanning all
+processes.
+
+The harness is deliberately crash-friendly: children that die (kill-
+injection tests) are just returned with their nonzero returncode — the
+caller relaunches with a fresh coordinator port to test resume. All
+children share this process's environment (minus any inherited
+``XLA_FLAGS``), so the persistent jax compilation cache set up by
+``tests/conftest.py`` warms them across reruns — with one hard carve-out:
+**cache persistence is disabled for multi-process children.** Under the
+gloo CPU runtime a persisted executable is not replayable: a warm rerun
+that deserializes instead of compiling silently computes a different
+final iterate (observed as cross-rank disagreement and trial-to-trial
+drift — even when each rank reloads an executable it wrote itself), and
+the cache key does not capture process placement, so a single-process
+12-device session also hashes the same HLO to the same key as the
+2-process 4-device program. Single-process children keep the cache,
+scoped to a per-device-count subdirectory so they never hit an entry
+written under a different topology.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional
+
+__all__ = ["free_coordinator_address", "launch_coordinated"]
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _child_env(num_processes: int, devices_per_process: int, pid: int,
+               coord: str, src: str,
+               extra_env: Optional[Dict[str, str]]) -> Dict[str, str]:
+    """The environment for coordinated child `pid`.
+
+    Drops any inherited ``XLA_FLAGS`` (the preamble forces the child's own
+    device count). An inherited persistent-compilation-cache dir is
+    removed for multi-process children (persisted executables do not
+    replay correctly under the gloo runtime — see module docstring) and
+    rescoped to a per-device-count subdirectory for single-process ones.
+    """
+    env = dict(os.environ, PYTHONPATH=src,
+               REPRO_COORDINATOR=coord,
+               REPRO_NUM_PROCESSES=str(num_processes),
+               REPRO_PROCESS_ID=str(pid))
+    env.pop("XLA_FLAGS", None)
+    cache = env.get("JAX_COMPILATION_CACHE_DIR")
+    if cache:
+        if num_processes > 1:
+            env.pop("JAX_COMPILATION_CACHE_DIR", None)
+        else:
+            scoped = os.path.join(cache, f"nproc1x{devices_per_process}")
+            os.makedirs(scoped, exist_ok=True)
+            env["JAX_COMPILATION_CACHE_DIR"] = scoped
+    env.update(extra_env or {})
+    return env
+
+
+def free_coordinator_address(host: str = "127.0.0.1") -> str:
+    """A ``host:port`` rendezvous address with a currently-free port.
+
+    The port is released before returning (the coordinator child must be
+    able to bind it), so there is a benign race with other port consumers
+    — fine for a test harness, where a collision just fails one launch.
+    """
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind((host, 0))
+        return f"{host}:{s.getsockname()[1]}"
+
+
+def launch_coordinated(script: str, num_processes: int,
+                       devices_per_process: int, *, timeout: int = 560,
+                       coordinator_address: Optional[str] = None,
+                       extra_env: Optional[Dict[str, str]] = None,
+                       ) -> List[subprocess.CompletedProcess]:
+    """Run `script` in `num_processes` coordinated fresh interpreters.
+
+    Each child sees ``devices_per_process`` forced host devices and enters
+    `script` with ``multihost.initialize()`` already done (global device
+    count = ``num_processes * devices_per_process``). Results come back as
+    one ``CompletedProcess`` per process id, stdout/stderr captured — by
+    convention the script prints a JSON payload as its last stdout line.
+
+    A child exiting nonzero (or being killed by the script under test)
+    does NOT raise: the kill-and-resume tests assert on returncodes and
+    relaunch. On timeout every surviving child is killed and the stalled
+    ranks are reported in the synthesized returncode (-9).
+    """
+    if num_processes < 1:
+        raise ValueError(f"num_processes must be >= 1, got {num_processes}")
+    if devices_per_process < 1:
+        raise ValueError(
+            f"devices_per_process must be >= 1, got {devices_per_process}")
+    coord = coordinator_address or free_coordinator_address()
+    preamble = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '{_FLAG}={devices_per_process}'\n"
+        "from repro.distributed import multihost\n"
+        "multihost.initialize()\n")
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", ".."))
+    procs = []
+    for pid in range(num_processes):
+        env = _child_env(num_processes, devices_per_process, pid, coord,
+                         src, extra_env)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", preamble + script], env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    deadline = time.monotonic() + timeout
+    results: List[Optional[subprocess.CompletedProcess]] = \
+        [None] * num_processes
+    try:
+        for pid, p in enumerate(procs):
+            left = max(0.1, deadline - time.monotonic())
+            try:
+                out, err = p.communicate(timeout=left)
+                results[pid] = subprocess.CompletedProcess(
+                    p.args, p.returncode, out, err)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                out, err = p.communicate()
+                results[pid] = subprocess.CompletedProcess(
+                    p.args, -9, out,
+                    (err or "") + f"\n[harness] rank {pid} timed out after "
+                    f"{timeout}s and was killed")
+    finally:
+        for p in procs:  # a stalled sibling must not outlive the harness
+            if p.poll() is None:
+                p.kill()
+    return results

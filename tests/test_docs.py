@@ -21,7 +21,8 @@ def test_repo_docs_have_no_dangling_references():
 
 def test_docs_pages_exist_and_are_linked_from_readme():
     for page in ("architecture.md", "backends.md", "benchmarks.md",
-                 "data.md", "fault_tolerance.md", "kernels.md"):
+                 "data.md", "fault_tolerance.md", "kernels.md",
+                 "multihost.md"):
         assert os.path.exists(os.path.join(ROOT, "docs", page)), page
     with open(os.path.join(ROOT, "README.md")) as f:
         readme = f.read()
@@ -31,6 +32,7 @@ def test_docs_pages_exist_and_are_linked_from_readme():
     assert "docs/data.md" in readme
     assert "docs/fault_tolerance.md" in readme
     assert "docs/kernels.md" in readme
+    assert "docs/multihost.md" in readme
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +226,52 @@ def test_kernel_tuning_drift_check_flags_undocumented_name(tmp_path):
     # foreign tree without the module: nothing to check
     assert check_docs.check_kernel_tuning_documented(
         str(tmp_path / "docs")) == []
+
+
+# ---------------------------------------------------------------------------
+# Multihost↔docs drift: every public name of repro.distributed.multihost must
+# have a docs/multihost.md entry, and the static scan must agree with the
+# runtime module it stands in for.
+# ---------------------------------------------------------------------------
+def test_multihost_scan_matches_runtime_module():
+    from repro.distributed import multihost
+    scanned = check_docs.multihost_api(os.path.abspath(ROOT))
+    runtime = sorted(
+        n for n, obj in vars(multihost).items()
+        if not n.startswith("_") and callable(obj)
+        and getattr(obj, "__module__", None) == multihost.__name__)
+    assert scanned == runtime, (scanned, runtime)
+    assert "initialize" in scanned and "local_device_slice" in scanned
+
+
+def test_every_multihost_name_is_documented():
+    errors = check_docs.check_multihost_documented(os.path.abspath(ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_multihost_drift_check_flags_undocumented_name(tmp_path):
+    dist = tmp_path / "src" / "repro" / "distributed"
+    dist.mkdir(parents=True)
+    (dist / "multihost.py").write_text(
+        "def initialize():\n    def inner(): ...\n"
+        "def _private(): ...\n"
+        "def ghost_helper(): ...\n")
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "multihost.md").write_text("`initialize` is covered\n")
+    errors = check_docs.check_multihost_documented(str(tmp_path))
+    # `inner` (indented) and `_private` are exempt; only the ghost flags
+    assert len(errors) == 1 and "`ghost_helper`" in errors[0], errors
+    (tmp_path / "README.md").write_text("clean\n")
+    assert errors[0] in check_docs.check_tree(str(tmp_path))
+    (docs / "multihost.md").write_text("`initialize` `ghost_helper`\n")
+    assert check_docs.check_multihost_documented(str(tmp_path)) == []
+    # missing page with a non-empty module is drift too
+    (docs / "multihost.md").unlink()
+    errors = check_docs.check_multihost_documented(str(tmp_path))
+    assert len(errors) == 1 and "missing" in errors[0]
+    # foreign tree without the module: nothing to check
+    assert check_docs.check_multihost_documented(str(tmp_path / "docs")) == []
 
 
 def test_checker_slug_rules():

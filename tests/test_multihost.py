@@ -1,0 +1,484 @@
+"""Multi-process mesh runtime (``repro.distributed.multihost`` + the
+``repro.testing.launch_coordinated`` harness).
+
+The load-bearing claims, in increasing strength:
+
+* ``num_processes=1`` under a live distributed runtime is the bitwise
+  degenerate case of every single-host backend (same history floats, same
+  final-iterate bytes).
+* A 2-process run — real gloo collectives crossing a process boundary —
+  is bitwise the 1-process run for the mesh backends. This is the ISSUE's
+  acceptance anchor: host-local tile placement plus cross-process psums
+  change *where* the numbers live, never what they are.
+* A 2-process ``run_resumable`` killed between segments resumes from the
+  coordinator-written checkpoint to the exact uninterrupted trajectory.
+
+Subprocess cells carry the ``multihost`` marker (deselect with
+``-m "not multihost"``); the in-process unit tests below them are plain.
+"""
+import hashlib
+import json
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.core import driver, engine
+from repro.data.plane import StreamPrefetcher
+from repro.distributed import multihost, suggest_commit_every
+from repro.testing import launch_coordinated, make_data_plane, \
+    small_fixture_config, sodda_test_mesh
+
+ITERS, RECORD = 6, 2
+BACKENDS = ("reference", "async", "shard_map", "async-mesh")
+
+# Each subprocess cell prints one JSON line per rank:
+#   {"process_index": i, "backends": {name: {"hist": [[t, F]], "w_sha256"}}}
+_RUN_SCRIPT = r"""
+import hashlib, json
+import jax
+from repro.core import driver, engine
+from repro.data.plane import TiledDataPlane
+from repro.distributed import multihost
+from repro.testing import small_fixture_config
+
+ITERS, RECORD = %(iters)d, %(record)d
+cfg = small_fixture_config()
+plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q)
+# early channel establishment + a named barrier must not perturb the
+# bitwise trajectories (and this exercises both across a real process
+# boundary)
+multihost.connect_mesh_collectives(engine.make_mesh_for(cfg))
+multihost.barrier("run-script-start", timeout_s=300)
+key = jax.random.PRNGKey(1)
+out = {"process_index": multihost.process_index(), "backends": {}}
+for backend in %(backends)r:
+    mesh = (engine.make_mesh_for(cfg)
+            if backend in engine.MESH_BACKENDS else None)
+    state, hist = driver.run(key, plane, cfg, ITERS, backend,
+                             record_every=RECORD, mesh=mesh)
+    w = multihost.fetch_local(state.w)
+    out["backends"][backend] = {
+        "hist": hist, "w_sha256": hashlib.sha256(w.tobytes()).hexdigest()}
+print(json.dumps(out))
+"""
+
+_RESUMABLE_SCRIPT = r"""
+import hashlib, json, os
+import jax
+from repro.core import driver, engine
+from repro.data.plane import TiledDataPlane
+from repro.distributed import multihost
+from repro.testing import small_fixture_config
+
+ITERS, SEGMENT, RECORD = %(iters)d, %(segment)d, %(record)d
+cfg = small_fixture_config()
+plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P, cfg.Q)
+mesh = engine.make_mesh_for(cfg)
+
+def preempt(done):
+    if %(kill)s and done == 2 * SEGMENT:
+        raise SystemExit(17)  # injected preemption, after the boundary save
+
+state, hist = driver.run_resumable(
+    jax.random.PRNGKey(1), plane, cfg, ITERS, "shard_map",
+    checkpoint_dir=os.environ["REPRO_TEST_CKPT"], segment_iters=SEGMENT,
+    record_every=RECORD, mesh=mesh, on_segment=preempt)
+w = multihost.fetch_local(state.w)
+print(json.dumps({"process_index": multihost.process_index(), "hist": hist,
+                  "w_sha256": hashlib.sha256(w.tobytes()).hexdigest()}))
+"""
+
+
+def _parse(results):
+    for r in results:
+        assert r.returncode == 0, \
+            f"rank failed rc={r.returncode}:\n{r.stderr[-2000:]}"
+    return [json.loads(r.stdout.strip().splitlines()[-1]) for r in results]
+
+
+@pytest.fixture(scope="module")
+def expected():
+    """The in-process single-host trajectories the harness runs must hit
+    bitwise — (history, sha256(w)) per backend, from plain driver.run."""
+    cfg = small_fixture_config()
+    plane = make_data_plane(cfg, "tiled")
+    key = jax.random.PRNGKey(1)
+    out = {}
+    for backend in BACKENDS:
+        mesh = (sodda_test_mesh(cfg)
+                if backend in engine.MESH_BACKENDS else None)
+        state, hist = driver.run(key, plane, cfg, ITERS, backend,
+                                 record_every=RECORD, mesh=mesh)
+        sha = hashlib.sha256(np.asarray(state.w).tobytes()).hexdigest()
+        out[backend] = (hist, sha)
+    return out
+
+
+@pytest.mark.multihost
+def test_one_process_degeneracy_is_bitwise(expected):
+    """A single process under a LIVE distributed runtime (the harness still
+    exports a coordinator, so jax.distributed is up) runs every backend
+    bitwise-identically to the plain single-host session."""
+    ranks = _parse(launch_coordinated(
+        _RUN_SCRIPT % {"iters": ITERS, "record": RECORD,
+                       "backends": BACKENDS},
+        num_processes=1, devices_per_process=4))
+    for backend in BACKENDS:
+        got = ranks[0]["backends"][backend]
+        want_hist, want_sha = expected[backend]
+        assert got["hist"] == [[t, f] for t, f in want_hist], \
+            f"{backend}: 1-process history diverged"
+        assert got["w_sha256"] == want_sha, \
+            f"{backend}: 1-process final iterate diverged"
+
+
+@pytest.mark.multihost
+def test_two_process_run_is_bitwise(expected):
+    """The acceptance anchor: 2 processes x 2 devices, host-local tile
+    placement, gloo psums — bitwise the single-process trajectory for both
+    mesh backends, on every rank."""
+    mesh_backends = ("shard_map", "async-mesh")
+    ranks = _parse(launch_coordinated(
+        _RUN_SCRIPT % {"iters": ITERS, "record": RECORD,
+                       "backends": mesh_backends},
+        num_processes=2, devices_per_process=2))
+    for backend in mesh_backends:
+        want_hist, want_sha = expected[backend]
+        for rank in ranks:
+            got = rank["backends"][backend]
+            assert got["hist"] == [[t, f] for t, f in want_hist], \
+                f"{backend} rank {rank['process_index']}: history diverged"
+            assert got["w_sha256"] == want_sha, \
+                f"{backend} rank {rank['process_index']}: iterate diverged"
+
+
+@pytest.mark.multihost
+def test_two_process_kill_and_resume_is_bitwise(expected, tmp_path):
+    """Kill both ranks after the second segment's coordinator-only save;
+    a fresh 2-process launch restores from the shared checkpoint dir and
+    completes with the exact uninterrupted single-process trajectory."""
+    iters, segment = 10, 4
+    d = str(tmp_path / "ckpt")
+    env = {"REPRO_TEST_CKPT": d}
+    fill = {"iters": iters, "segment": segment, "record": RECORD}
+
+    killed = launch_coordinated(
+        _RESUMABLE_SCRIPT % dict(fill, kill="True"),
+        num_processes=2, devices_per_process=2, extra_env=env)
+    assert [r.returncode for r in killed] == [17, 17], \
+        f"expected injected kills, got {[r.returncode for r in killed]}: " \
+        f"{killed[0].stderr[-2000:]}"
+    assert latest_step(d) == 2 * segment  # the kill landed after the save
+
+    ranks = _parse(launch_coordinated(
+        _RESUMABLE_SCRIPT % dict(fill, kill="False"),
+        num_processes=2, devices_per_process=2, extra_env=env))
+
+    cfg = small_fixture_config()
+    s_full, h_full = driver.run_resumable(
+        jax.random.PRNGKey(1), make_data_plane(cfg, "tiled"), cfg, iters,
+        "shard_map", checkpoint_dir=str(tmp_path / "c2"),
+        segment_iters=segment, record_every=RECORD,
+        mesh=sodda_test_mesh(cfg))
+    want_sha = hashlib.sha256(np.asarray(s_full.w).tobytes()).hexdigest()
+    for rank in ranks:
+        assert rank["hist"] == [[t, f] for t, f in h_full], \
+            f"rank {rank['process_index']}: resumed history diverged"
+        assert rank["w_sha256"] == want_sha, \
+            f"rank {rank['process_index']}: resumed iterate diverged"
+
+
+# ---------------------------------------------------------------------------
+# In-process unit tests: bootstrap argument contract.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def no_rendezvous_env(monkeypatch):
+    for var in (multihost.COORDINATOR_ENV, multihost.NUM_PROCESSES_ENV,
+                multihost.PROCESS_ID_ENV):
+        monkeypatch.delenv(var, raising=False)
+
+
+def test_initialize_is_a_noop_without_rendezvous(no_rendezvous_env):
+    assert multihost.initialize() is False
+    assert multihost.is_initialized() is False
+    assert multihost.process_count() == 1
+    assert multihost.process_index() == 0
+    assert multihost.is_coordinator() is True
+
+
+def test_initialize_rejects_multiprocess_without_coordinator(
+        no_rendezvous_env, monkeypatch):
+    with pytest.raises(ValueError, match="coordinator_address"):
+        multihost.initialize(num_processes=2)
+    # the env-var path resolves identically to explicit arguments
+    monkeypatch.setenv(multihost.NUM_PROCESSES_ENV, "3")
+    with pytest.raises(ValueError, match=multihost.COORDINATOR_ENV):
+        multihost.initialize()
+
+
+def test_initialize_rejects_out_of_range_process_id(no_rendezvous_env):
+    with pytest.raises(ValueError, match="process_id"):
+        multihost.initialize(coordinator_address="127.0.0.1:1",
+                             num_processes=2, process_id=5)
+
+
+def test_initialize_reports_live_runtime_on_recall(no_rendezvous_env,
+                                                   monkeypatch):
+    """Once the runtime is up, initialize() keeps answering True even when
+    the env vars that brought it up are gone; arguments omitted on a later
+    call inherit the live runtime's values, and any resolved argument that
+    conflicts with them raises — one process belongs to one runtime."""
+    monkeypatch.setattr(multihost, "_INITIALIZED", ("127.0.0.1:9", 2, 1))
+    assert multihost.initialize() is True
+    assert multihost.initialize(coordinator_address="127.0.0.1:9",
+                                num_processes=2, process_id=1) is True
+    # partial arguments inherit the rest from the live runtime
+    assert multihost.initialize(coordinator_address="127.0.0.1:9") is True
+    with pytest.raises(RuntimeError, match="one runtime"):
+        multihost.initialize(num_processes=3)
+    with pytest.raises(RuntimeError, match="one runtime"):
+        multihost.initialize(coordinator_address="10.0.0.1:9")
+
+
+def test_local_device_slice_covers_the_full_array_single_process():
+    """Every device is addressable in-process, so the local rectangle is
+    the whole array — for the (data, model) matrix sharding and the
+    data-only (replicated-over-model) vector sharding alike."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = sodda_test_mesh(small_fixture_config())
+    x_sh = NamedSharding(mesh, P("data", "model"))
+    assert multihost.local_device_slice(x_sh, (8, 6)) == \
+        (slice(0, 8), slice(0, 6))
+    y_sh = NamedSharding(mesh, P("data"))
+    assert multihost.local_device_slice(y_sh, (8,)) == (slice(0, 8),)
+
+
+def test_process_local_placement_falls_back_to_per_device(monkeypatch):
+    """A non-rectangular addressable shard set (local_device_slice raises
+    ValueError on an exotic device permutation) must not kill the run:
+    ``_materialize_mesh_process_local`` falls back to per-device placement,
+    which needs no contiguity and yields the same arrays."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.data.plane import TiledDataPlane
+    cfg = small_fixture_config()
+    mesh = sodda_test_mesh(cfg)
+    plane = TiledDataPlane(jax.random.PRNGKey(0), cfg.N, cfg.M, cfg.P,
+                           cfg.Q)
+    x_sh = NamedSharding(mesh, P("data", "model"))
+    y_sh = NamedSharding(mesh, P("data"))
+
+    def non_rectangular(sharding, global_shape):
+        raise ValueError("addressable shards: not a contiguous rectangle")
+
+    monkeypatch.setattr(multihost, "local_device_slice", non_rectangular)
+    X, y = plane._materialize_mesh_process_local(x_sh, y_sh)
+    X_ref, y_ref = plane.materialize()
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(X_ref))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_put_sharded_and_fetch_local_roundtrip_single_process():
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = sodda_test_mesh(small_fixture_config())
+    sh = NamedSharding(mesh, P("data", "model"))
+    val = np.arange(48, dtype=np.float32).reshape(8, 6)
+    arr = multihost.put_sharded(val, sh)
+    np.testing.assert_array_equal(
+        np.asarray(arr), np.asarray(jax.device_put(val, sh)))
+    np.testing.assert_array_equal(multihost.fetch_local(arr), val)
+    # non-jax values take the plain numpy path
+    np.testing.assert_array_equal(multihost.fetch_local(val), val)
+
+
+def test_barrier_and_connect_are_noops_without_a_runtime():
+    """Without a distributed runtime there is nobody to rendezvous with:
+    both helpers must return immediately (driver code can call them
+    unconditionally). The cross-process behavior is exercised by the
+    launch-harness cells above, whose run script connects + barriers
+    before the bitwise-anchored runs."""
+    assert multihost.is_initialized() is False
+    assert multihost.barrier("unit-test", timeout_s=0.001) is None
+    mesh = sodda_test_mesh(small_fixture_config())
+    assert multihost.connect_mesh_collectives(mesh) is None
+
+
+def test_harness_cache_policy_multiprocess_off_single_process_scoped(
+        monkeypatch, tmp_path):
+    """Persisted executables do not replay correctly under the
+    multi-process gloo runtime: a warm rerun that deserializes instead
+    of compiling silently drifts from the bitwise anchor (observed as
+    cross-rank disagreement, even when a rank reloads an entry it wrote
+    itself). So the harness must strip the inherited cache dir from
+    multi-process children, and scope single-process children to a
+    per-device-count subdirectory (the cache key does not capture
+    topology, so the 12-device pytest parent writes colliding keys)."""
+    from repro.testing import multiprocess as mp
+    monkeypatch.setenv("JAX_COMPILATION_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=12")
+    env = mp._child_env(2, 2, 1, "127.0.0.1:1234", "/src", None)
+    assert "JAX_COMPILATION_CACHE_DIR" not in env
+    # the preamble forces the child's own device count; the parent's
+    # flag must not leak through
+    assert "XLA_FLAGS" not in env
+    assert env["REPRO_NUM_PROCESSES"] == "2"
+    assert env["REPRO_PROCESS_ID"] == "1"
+    # single-process children keep the warm cache, topology-scoped
+    env = mp._child_env(1, 4, 0, "c:0", "/src", None)
+    assert env["JAX_COMPILATION_CACHE_DIR"] == str(tmp_path / "nproc1x4")
+    assert (tmp_path / "nproc1x4").is_dir()
+    # an explicit extra_env override still wins (probe scripts rely on it)
+    env = mp._child_env(2, 2, 0, "c:0", "/src",
+                        {"JAX_COMPILATION_CACHE_DIR": str(tmp_path / "own")})
+    assert env["JAX_COMPILATION_CACHE_DIR"] == str(tmp_path / "own")
+    # no inherited cache dir: none injected
+    monkeypatch.delenv("JAX_COMPILATION_CACHE_DIR")
+    env = mp._child_env(1, 1, 0, "c:0", "/src", None)
+    assert "JAX_COMPILATION_CACHE_DIR" not in env
+
+
+# ---------------------------------------------------------------------------
+# StreamPrefetcher depth: the bounded issue queue.
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_rejects_nonpositive_depth():
+    with pytest.raises(ValueError, match="depth"):
+        StreamPrefetcher(lambda e: e, depth=0)
+
+
+def test_prefetcher_default_depth_is_the_double_buffer():
+    with StreamPrefetcher(lambda e: e * 10) as pf:
+        pf.issue(0)
+        assert pf.consume(0) == 0
+        pf.issue(1)
+        assert pf.consume(1) == 10
+    s = pf.stats()
+    assert s["depth"] == 1
+    assert s["queue_high_water"] == 1
+    assert s["cold_misses"] == 0
+    assert s["consumed"] == 2
+
+
+def test_prefetcher_depth_bounds_the_issue_queue():
+    """With depth=2, a third issue past the newest consumed epoch is a
+    silent no-op — its later consume is a cold miss, which still works
+    (the depth bound never deadlocks the consumer)."""
+    gate = threading.Event()
+
+    def place(e):
+        gate.wait(10)
+        return e * 10
+
+    with StreamPrefetcher(place, depth=2) as pf:
+        pf.issue(0)
+        pf.issue(1)
+        pf.issue(2)  # beyond the bound: dropped
+        gate.set()
+        assert pf.consume(0) == 0
+        assert pf.consume(1) == 10
+        assert pf.consume(2) == 20  # cold miss proves issue(2) was dropped
+    s = pf.stats()
+    assert s["depth"] == 2
+    assert s["queue_high_water"] == 2
+    assert s["cold_misses"] == 1
+
+
+def test_prefetcher_depth_two_keeps_two_windows_in_flight():
+    with StreamPrefetcher(lambda e: e, depth=2) as pf:
+        pf.issue(0)
+        pf.issue(1)
+        assert pf.consume(0) == 0
+        pf.issue(2)
+        assert pf.consume(1) == 1
+        assert pf.consume(2) == 2
+    s = pf.stats()
+    assert s["queue_high_water"] == 2
+    assert s["cold_misses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# suggest_commit_every: cadence from the measured supervision block.
+# ---------------------------------------------------------------------------
+
+def _supervision(ratio, c0=2, seg=8, rec=2):
+    return {"in_scan_commit_overhead_ratio": ratio,
+            "segment_iters": seg, "record_every": rec,
+            "cells": {"commit_every_small": {"commit_every": c0}}}
+
+
+def test_suggest_commit_every_picks_smallest_affordable_cadence():
+    # k = (1.5 - 1) * 2 = 1.0 bare iterations per commit; legal cadences
+    # of seg=8/rec=2 are 2, 4, 8; 0.25 * 4 is the first budget >= k.
+    assert suggest_commit_every(_supervision(1.5)) == 4
+
+
+def test_suggest_commit_every_free_commits_pick_the_finest_cadence():
+    # measurement noise can put the ratio under 1.0: commits are free,
+    # the finest legal cadence (= record_every) wins
+    assert suggest_commit_every(_supervision(0.97)) == 2
+
+
+def test_suggest_commit_every_expensive_commits_fall_back_to_boundaries():
+    # k = (9 - 1) * 2 = 16 > 0.25 * 8: no legal cadence fits the budget
+    assert suggest_commit_every(_supervision(9.0)) == 0
+
+
+def test_suggest_commit_every_zero_budget_disables_in_scan_commits():
+    assert suggest_commit_every(_supervision(1.1), max_overhead=0.0) == 0
+    assert suggest_commit_every(_supervision(1.1), max_overhead=-1.0) == 0
+
+
+def test_suggest_commit_every_explicit_overrides_beat_the_stamps():
+    # same k = 1.0 but a 16-iteration segment recorded every 4: the legal
+    # cadences are 4, 8, 16 and 0.25 * 4 already affords the commit
+    assert suggest_commit_every(_supervision(1.5),
+                                segment_iters=16, record_every=4) == 4
+
+
+def test_suggest_commit_every_validates_its_inputs():
+    with pytest.raises(ValueError, match="divide"):
+        suggest_commit_every(_supervision(1.5), segment_iters=10,
+                             record_every=4)
+    with pytest.raises(ValueError, match="commit_every_small"):
+        suggest_commit_every(_supervision(1.5, c0=0))
+
+
+# ---------------------------------------------------------------------------
+# bench_trend --plot: committed-SVG rendering smoke.
+# ---------------------------------------------------------------------------
+
+def test_bench_trend_plot_is_deterministic(tmp_path):
+    """`--history H --plot OUT.svg` exits 0 and renders byte-identical
+    output across runs — the committed results/BENCH_history.svg can be
+    regenerated reproducibly."""
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    hist = tmp_path / "hist.jsonl"
+    entries = [
+        {"schema": "bench_history/v1", "seq": i + 1, "label": f"PR{i}",
+         "date": "2026-08-08", "iters": 240,
+         "problem": {"name": "t", "P": 2, "Q": 2, "N": 160, "M": 32,
+                     "L": 6, "loss": "hinge"},
+         "backends": {"reference": 150.0 + i, "shard_map": 320.0 - i}}
+        for i in range(3)
+    ]
+    hist.write_text("".join(json.dumps(e) + "\n" for e in entries))
+    outs = []
+    for name in ("a.svg", "b.svg"):
+        out = tmp_path / name
+        proc = subprocess.run(
+            [sys.executable, os.path.join(root, "tools", "bench_trend.py"),
+             "--history", str(hist), "--plot", str(out)],
+            capture_output=True, text=True, timeout=60)
+        assert proc.returncode == 0, proc.stderr
+        outs.append(out.read_bytes())
+    assert outs[0] == outs[1], "--plot output is not deterministic"
+    assert b"<svg" in outs[0]

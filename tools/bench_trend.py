@@ -14,6 +14,13 @@ Two modes, one metric (per-backend ``scan_driver.us_per_iter``):
   problem/iters are skipped with a note; the gate refuses (exit 3) when no
   entry is comparable. ``--append`` appends the current artifact as the
   next entry after a passing gate — how CI grows the trajectory.
+* **Plot** (``--history ... --plot out.svg``): render the trajectory as a
+  self-contained SVG — one log-scale us/iter line per backend over the
+  ``seq`` axis. Deterministic (no timestamps): an unchanged history
+  regenerates byte-identical output, so the committed
+  ``results/BENCH_history.svg`` diffs only when the trajectory grows.
+  Plot-only when no current artifact is given; otherwise plots, then
+  gates.
 
 Pure stdlib (json only) — runnable in the dependency-free CI jobs.
 
@@ -21,6 +28,8 @@ Pure stdlib (json only) — runnable in the dependency-free CI jobs.
     python tools/bench_trend.py base.json new.json --threshold 0.5
     python tools/bench_trend.py --history results/BENCH_history.jsonl \\
         results/BENCH_sodda.json [--append --label PR9]
+    python tools/bench_trend.py --history results/BENCH_history.jsonl \\
+        --plot results/BENCH_history.svg
 
 Exit codes (documented in docs/benchmarks.md):
 
@@ -156,6 +165,113 @@ def history_entry(current: dict, seq: int, label: str, date: str) -> dict:
     }
 
 
+_PALETTE = ("#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd",
+            "#8c564b", "#e377c2", "#7f7f7f", "#bcbd22", "#17becf")
+
+
+def render_history_svg(entries: list) -> str:
+    """A self-contained SVG of the per-backend us/iter trajectory.
+
+    One log-scale polyline per backend over the history's ``seq`` axis,
+    colors from a fixed palette in sorted-backend order. Pure function of
+    the entries — no timestamps, no randomness — so regenerating from an
+    unchanged history is byte-identical (what the smoke test pins, and
+    what keeps the committed artifact diff-free on no-op reruns).
+    """
+    import math
+
+    series: dict = {}
+    for e in entries:
+        for name, us in sorted(e["backends"].items()):
+            us = float(us)
+            if us <= 0:
+                raise ValueError(
+                    f"history seq {e['seq']}: backends[{name!r}] us/iter "
+                    f"must be positive to plot on a log scale, got {us}")
+            series.setdefault(name, []).append((int(e["seq"]), us))
+    if not series:
+        raise ValueError("history has no backend measurements to plot")
+    W, H, ml, mr, mt, mb = 720, 400, 64, 168, 36, 44
+    pw, ph = W - ml - mr, H - mt - mb
+    seqs = sorted({s for pts in series.values() for s, _ in pts})
+    s_lo, s_hi = seqs[0], seqs[-1]
+    vals = [v for pts in series.values() for _, v in pts]
+    lo = math.floor(math.log10(min(vals)))
+    hi = math.ceil(math.log10(max(vals)))
+    if hi == lo:
+        hi = lo + 1
+
+    def x(seq):
+        frac = 0.5 if s_hi == s_lo else (seq - s_lo) / (s_hi - s_lo)
+        return ml + frac * pw
+
+    def y(us):
+        return mt + ph * (1.0 - (math.log10(us) - lo) / (hi - lo))
+
+    def f(v):
+        return format(v, ".2f")
+
+    out = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" '
+        f'viewBox="0 0 {W} {H}" font-family="monospace" font-size="12">',
+        f'<rect width="{W}" height="{H}" fill="white"/>',
+        f'<text x="{ml}" y="20" font-size="14">scan_driver us/iter per '
+        'backend (log scale) across the PR trajectory</text>',
+    ]
+    for d in range(lo, hi + 1):  # horizontal gridlines at powers of ten
+        gy = f(y(10.0 ** d))
+        out.append(f'<line x1="{ml}" y1="{gy}" x2="{ml + pw}" y2="{gy}" '
+                   'stroke="#dddddd"/>')
+        out.append(f'<text x="{ml - 8}" y="{gy}" text-anchor="end" '
+                   f'dominant-baseline="middle">1e{d}</text>')
+    for s in seqs:  # seq ticks along the bottom
+        tx = f(x(s))
+        out.append(f'<line x1="{tx}" y1="{mt + ph}" x2="{tx}" '
+                   f'y2="{mt + ph + 5}" stroke="#444444"/>')
+        out.append(f'<text x="{tx}" y="{mt + ph + 18}" '
+                   f'text-anchor="middle">{s}</text>')
+    out.append(f'<text x="{ml + pw / 2:.2f}" y="{H - 8}" '
+               'text-anchor="middle">history seq (one entry per PR)</text>')
+    out.append(f'<rect x="{ml}" y="{mt}" width="{pw}" height="{ph}" '
+               'fill="none" stroke="#444444"/>')
+    for i, name in enumerate(sorted(series)):
+        color = _PALETTE[i % len(_PALETTE)]
+        pts = sorted(series[name])
+        path = " ".join(f"{f(x(s))},{f(y(v))}" for s, v in pts)
+        out.append(f'<polyline points="{path}" fill="none" '
+                   f'stroke="{color}" stroke-width="1.5"/>')
+        for s, v in pts:
+            out.append(f'<circle cx="{f(x(s))}" cy="{f(y(v))}" r="3" '
+                       f'fill="{color}"/>')
+        ly = mt + 14 + 16 * i
+        out.append(f'<line x1="{ml + pw + 10}" y1="{ly - 4}" '
+                   f'x2="{ml + pw + 28}" y2="{ly - 4}" stroke="{color}" '
+                   'stroke-width="3"/>')
+        out.append(f'<text x="{ml + pw + 34}" y="{ly}">{name}</text>')
+    out.append("</svg>")
+    return "\n".join(out) + "\n"
+
+
+def run_plot(args) -> int:
+    try:
+        entries = load_history(args.history)
+    except (OSError, ValueError) as e:
+        print(f"ERROR: {type(e).__name__}: {e}")
+        return 2
+    if not entries:
+        print("INCOMPARABLE: history is empty (nothing to plot)")
+        return 3
+    try:
+        svg = render_history_svg(entries)
+    except ValueError as e:
+        print(f"ERROR: ValueError: {e}")
+        return 2
+    with open(args.plot, "w") as f:
+        f.write(svg)
+    print(f"wrote {len(entries)}-entry trajectory plot to {args.plot}")
+    return 0
+
+
 def run_history_gate(args) -> int:
     try:
         entries = load_history(args.history)
@@ -220,7 +336,9 @@ def main(argv=None) -> int:
                     "best of a bench_history/v1 trajectory)")
     ap.add_argument("baseline", nargs="?", default=None,
                     help="baseline BENCH_sodda.json (two-point mode only)")
-    ap.add_argument("current")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="freshly generated BENCH_sodda.json (optional in "
+                         "--plot mode)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional us/iter growth per backend "
                          "(default 0.25 = 25%%)")
@@ -235,6 +353,10 @@ def main(argv=None) -> int:
                     help="entry label for --append (e.g. the PR name)")
     ap.add_argument("--date", default=None,
                     help="entry date for --append (default: today)")
+    ap.add_argument("--plot", default=None, metavar="SVG",
+                    help="with --history: render the trajectory as an SVG "
+                         "(one log-scale line per backend) to this path; "
+                         "without a current artifact, plot-only")
     try:
         args = ap.parse_args(argv)
     except SystemExit as e:
@@ -244,13 +366,29 @@ def main(argv=None) -> int:
     if args.threshold < 0:
         print(f"threshold must be >= 0, got {args.threshold}")
         return 2
+    if args.current is None and args.baseline is not None:
+        # with both positionals optional, argparse fills `baseline` first —
+        # but a single positional has always meant the CURRENT artifact
+        # (history mode); the baseline only ever comes as the first of two
+        args.baseline, args.current = None, args.baseline
+    if args.plot is not None and args.history is None:
+        print("--plot renders a history trajectory; it requires --history")
+        return 2
     if args.history is not None:
         if args.baseline is not None:
             print("--history replaces the baseline positional; "
                   "pass only the current artifact")
             return 2
+        if args.plot is not None:
+            rc = run_plot(args)
+            if rc or args.current is None:
+                return rc
+        elif args.current is None:
+            print("history gate needs the current artifact "
+                  "(or --plot for plot-only)")
+            return 2
         return run_history_gate(args)
-    if args.baseline is None:
+    if args.baseline is None or args.current is None:
         print("two-point mode needs both baseline and current artifacts")
         return 2
     if args.append:

@@ -13,16 +13,18 @@ silently-broken documentation behind:
     ``repro.core.driver.make_run``) — some prefix of at least two components
     must resolve to a module or package under ``src/``.
 
-It also checks the reverse direction for four API surfaces: every backend
+It also checks the reverse direction for five API surfaces: every backend
 registered in ``src/repro/core/engine.py`` must appear (backticked) in the
 ``docs/backends.md`` catalog, every data plane registered in
 ``src/repro/data/plane.py`` must appear in ``docs/data.md``, every
 public supervisor/policy name defined in
 ``src/repro/distributed/fault_tolerance.py`` must appear in
-``docs/fault_tolerance.md``, and every public name of the kernel-tuning
+``docs/fault_tolerance.md``, every public name of the kernel-tuning
 module ``src/repro/kernels/tuning.py`` (``BlockConfig``, the legality
-checks, the autotuner) must appear in ``docs/kernels.md`` — so none of
-them can land undocumented. The surfaces are read by scanning the sources
+checks, the autotuner) must appear in ``docs/kernels.md``, and every
+public name of the multi-process bootstrap
+``src/repro/distributed/multihost.py`` must appear in
+``docs/multihost.md`` — so none of them can land undocumented. The surfaces are read by scanning the sources
 for the ``@register_backend("...")`` / ``@register_plane("...")``
 decorations and top-level ``class``/``def`` statements — pure stdlib, no
 jax import — so the CI docs job stays dependency-free.
@@ -298,6 +300,43 @@ def check_kernel_tuning_documented(root: str):
             for n in names if f"`{n}`" not in text]
 
 
+_MULTIHOST_SRC = os.path.join("src", "repro", "distributed", "multihost.py")
+_MULTIHOST_DOC = os.path.join("docs", "multihost.md")
+
+
+def multihost_api(root: str):
+    """Public top-level names (classes + functions) of the multi-process
+    runtime bootstrap ``src/repro/distributed/multihost.py``, by static
+    scan — the initialize/topology/placement surface that
+    ``docs/multihost.md`` documents. Underscore-prefixed names are private
+    and exempt; the scan is pinned against the runtime module in
+    ``tests/test_docs.py`` like the other four surfaces."""
+    path = os.path.join(root, _MULTIHOST_SRC)
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        return sorted(set(_PUBLIC_DEF_RE.findall(f.read())))
+
+
+def check_multihost_documented(root: str):
+    """Multihost-API↔docs drift: every public name in the multihost
+    bootstrap must appear backticked in ``docs/multihost.md`` — a new
+    rendezvous knob or placement helper cannot land undocumented,
+    mirroring the backend/plane/fault-tolerance/tuning gates."""
+    names = multihost_api(root)
+    doc_path = os.path.join(root, _MULTIHOST_DOC)
+    if not names:
+        return []
+    if not os.path.isfile(doc_path):
+        return [f"{_MULTIHOST_DOC}: missing, but the multihost bootstrap "
+                f"defines {len(names)} public names"]
+    with open(doc_path) as f:
+        text = f.read()
+    return [f"{_MULTIHOST_DOC}: public multihost name `{n}` has no doc "
+            "entry (multihost-API↔docs drift)"
+            for n in names if f"`{n}`" not in text]
+
+
 def check_tree(root: str):
     errors = []
     for md in _md_files(root):
@@ -306,6 +345,7 @@ def check_tree(root: str):
     errors.extend(check_planes_documented(root))
     errors.extend(check_fault_tolerance_documented(root))
     errors.extend(check_kernel_tuning_documented(root))
+    errors.extend(check_multihost_documented(root))
     return errors
 
 
@@ -323,10 +363,11 @@ def main(argv=None) -> int:
     np_ = len(registry_planes(root))
     nf = len(fault_tolerance_api(root))
     nt = len(kernel_tuning_api(root))
+    nm = len(multihost_api(root))
     print(f"{'FAIL' if errors else 'OK'}: {n} markdown files + {nb} "
           f"registered backends + {np_} registered data planes + {nf} "
-          f"fault-tolerance names + {nt} kernel-tuning names checked, "
-          f"{len(errors)} dangling references")
+          f"fault-tolerance names + {nt} kernel-tuning names + {nm} "
+          f"multihost names checked, {len(errors)} dangling references")
     return 1 if errors else 0
 
 
